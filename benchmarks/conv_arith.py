@@ -1,0 +1,79 @@
+"""Paper Table 4 analogue: arithmetic profile + interpret-mode wall clock.
+
+Two parts:
+  1. analytic op counts per algorithm (useful MACs, transform adds, index
+     overhead) — the structural quantities behind the paper's instruction
+     counts;
+  2. interpret-mode wall time of the actual Pallas kernels on small shapes
+     (CPU emulation: RELATIVE sanity only, not TPU performance — the
+     roofline benchmarks carry the perf claims).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.resnet import PAPER_CONV_LAYERS
+from repro.kernels import ops, ref
+
+# paper Table 4, conv4.x (10^4 instructions)
+PAPER_TABLE4 = {
+    "im2col": {"vector": 248.32 + 4707.2, "scalar": 343.68 + 785.76},
+    "libdnn": {"vector": 6289.12, "scalar": 1277.28},
+    "winograd": {"vector": 112.16 + 2469.12 + 52.8,
+                 "scalar": 27.84 + 447.36 + 2.88},
+    "direct": {"vector": 5711.52, "scalar": 990.88},
+    "ilpm": {"vector": 3935.2, "scalar": 43.84},
+}
+
+
+def analytic_ops(layer):
+    H, W, C, K, R, S = layer.h, layer.w, layer.c_in, layer.c_out, layer.r, layer.s
+    macs = H * W * R * S * C * K
+    wino_macs = 16 * (H // 2) * (W // 2) * C * K
+    wino_adds = 2 * 16 * 4 * (H // 2) * (W // 2) * (C + K)  # B^T d B + A^T m A
+    return {
+        "im2col": {"macs": macs, "extra": H * W * R * S * C},   # unroll copies
+        "libdnn": {"macs": macs, "extra": H * W * R * S * C * (K // 128 or 1)},
+        "winograd": {"macs": wino_macs, "extra": wino_adds},
+        "direct": {"macs": macs, "extra": R * S * C * K},       # filter restage
+        "ilpm": {"macs": macs, "extra": 0},
+    }
+
+
+def wall_clock(h=14, w=14, c=32, k=64, repeats=3):
+    """Interpret-mode relative wall times (CPU emulation of the kernels)."""
+    key = jax.random.key(0)
+    x = jax.random.normal(key, (1, h, w, c))
+    wgt = jax.random.normal(jax.random.fold_in(key, 1), (3, 3, c, k))
+    xp = ref.pad_same(x, 3, 3)
+    out = {}
+    for name, fn in ops.ALGORITHMS.items():
+        try:
+            fn(xp, wgt, impl="pallas").block_until_ready()
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                fn(xp, wgt, impl="pallas").block_until_ready()
+            out[name] = (time.perf_counter() - t0) / repeats * 1e6
+        except Exception as e:  # noqa: BLE001
+            out[name] = None
+    return out
+
+
+def main():
+    layer = PAPER_CONV_LAYERS[2]  # conv4.x, the paper's profile subject
+    ops_count = analytic_ops(layer)
+    print("algorithm,analytic_MACs,analytic_extra_ops,"
+          "paper_vector_inst_e4,paper_scalar_inst_e4")
+    for a, d in ops_count.items():
+        p = PAPER_TABLE4[a]
+        print(f"{a},{d['macs']},{d['extra']},{p['vector']},{p['scalar']}")
+    wc = wall_clock()
+    print("# interpret-mode us/call (CPU emulation, relative only):",
+          {k: (round(v, 1) if v else None) for k, v in wc.items()})
+
+
+if __name__ == "__main__":
+    main()

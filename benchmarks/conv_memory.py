@@ -1,0 +1,79 @@
+"""Paper Table 3 reproduction: global-memory traffic per algorithm.
+
+The paper measures MB read/written per kernel on Vega 8 (codeXL profile,
+conv4.x: C=K=256, 14x14, fp32). We reproduce those numbers ANALYTICALLY
+from each algorithm's data movement — the core claim (ILP-M touches the
+least global memory; im2col's unrolled matrix round-trips HBM) is validated
+if the analytic bytes land near the measured profile.
+"""
+from __future__ import annotations
+
+from repro.configs.resnet import PAPER_CONV_LAYERS
+
+# paper Table 3 (conv4.x), MB — (read, write) per kernel phase
+PAPER_TABLE3 = {
+    "im2col_im2col": (0.20, 1.73),
+    "im2col_gemm": (9.27, 0.20),
+    "libdnn_conv": (2.48, 0.20),
+    "winograd_trans_from_image": (0.20, 0.77),
+    "winograd_gemm_x16": (4.91, 0.77),
+    "winograd_trans_to_output": (0.77, 0.19),
+    "direct_conv": (2.60, 0.19),
+    "ILP-M_conv": (2.46, 0.20),
+}
+
+MB = 1e6
+
+
+def analytic_traffic(layer, el=4):
+    """Analytic (read_MB, write_MB) per algorithm phase for one layer."""
+    H, W, C, K, R, S = layer.h, layer.w, layer.c_in, layer.c_out, layer.r, layer.s
+    img = H * W * C * el
+    filt = R * S * C * K * el
+    out = H * W * K * el
+    patches = H * W * R * S * C * el
+    v = 16 * (H // 2) * (W // 2) * C * el
+    m = 16 * (H // 2) * (W // 2) * K * el
+    u = 16 * C * K * el
+    return {
+        "im2col_im2col": (img / MB, patches / MB),
+        "im2col_gemm": ((patches + filt) / MB, out / MB),
+        "libdnn_conv": ((img + filt) / MB, out / MB),
+        "winograd_trans_from_image": (img / MB, v / MB),
+        "winograd_gemm_x16": ((v + u) / MB, m / MB),
+        "winograd_trans_to_output": (m / MB, out / MB),
+        "direct_conv": ((img + filt) / MB, out / MB),
+        "ILP-M_conv": ((img + filt) / MB, out / MB),
+    }
+
+
+def run(layer_name="conv4.x"):
+    layer = next(l for l in PAPER_CONV_LAYERS if l.name == layer_name)
+    ours = analytic_traffic(layer)
+    rows = []
+    for k, (pr, pw) in PAPER_TABLE3.items():
+        ar, aw = ours[k]
+        rows.append({
+            "kernel": k, "paper_read_MB": pr, "paper_write_MB": pw,
+            "analytic_read_MB": round(ar, 2), "analytic_write_MB": round(aw, 2),
+            "read_ratio": round(ar / pr, 2) if pr else None,
+        })
+    # headline: ILP-M read reduction vs im2col total (paper: 74.0%)
+    im2col_total = ours["im2col_im2col"][0] + ours["im2col_gemm"][0]
+    reduction = 1 - ours["ILP-M_conv"][0] / im2col_total
+    return rows, {"ilpm_read_reduction_vs_im2col": round(reduction, 3),
+                  "paper_claim": 0.740}
+
+
+def main():
+    rows, headline = run()
+    print("kernel,paper_read_MB,analytic_read_MB,paper_write_MB,analytic_write_MB")
+    for r in rows:
+        print(f"{r['kernel']},{r['paper_read_MB']},{r['analytic_read_MB']},"
+              f"{r['paper_write_MB']},{r['analytic_write_MB']}")
+    print(f"# ILP-M read reduction vs im2col: {headline['ilpm_read_reduction_vs_im2col']}"
+          f" (paper: {headline['paper_claim']})")
+
+
+if __name__ == "__main__":
+    main()

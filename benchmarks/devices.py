@@ -1,0 +1,13 @@
+"""Device constants for the cost-model benchmarks.
+
+The paper's three platforms (Table 1) + our target TPU v5e. Peak FLOP/s for
+the paper's GPUs ≈ ALUs x 2 (FMA) x clock.
+"""
+
+DEVICES = {
+    # name: (peak_flops, mem_bw_bytes_s)
+    "mali_g76": (240 * 2 * 0.72e9, 33.3e9),     # Arm Mali-G76 MP10, LPDDR4x2
+    "vega8": (512 * 2 * 1.1e9, 25.0e9),         # AMD Radeon Vega 8, DDR4 x1
+    "radeon_vii": (3840 * 2 * 1.4e9, 1024e9),   # AMD Radeon VII, HBM2
+    "tpu_v5e": (197e12, 819e9),                 # per chip, bf16
+}

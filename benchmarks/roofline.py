@@ -1,0 +1,68 @@
+"""§Roofline table builder: reads dryrun_results.json -> markdown + CSV.
+
+Per (arch x shape x mesh): the three roofline terms in seconds, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs useful-compute ratio, and the
+per-device HBM high-water mark (peak + args) against the 16 GB budget.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent.parent / "dryrun_results.json"
+
+
+def load(path=RESULTS):
+    if not Path(path).exists():
+        return []
+    return json.loads(Path(path).read_text())
+
+
+def table(results, mesh="16x16"):
+    rows = []
+    for r in results:
+        if "error" in r or r["mesh"] != mesh:
+            continue
+        t = r["roofline_s"]
+        pd = r["per_device"]
+        hbm = (pd["peak_bytes"] + pd["argument_bytes"]) / 2 ** 30
+        frac = max(t.values()) and (t["compute"] / max(t.values()))
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "t_compute_s": f"{t['compute']:.3e}",
+            "t_memory_s": f"{t['memory']:.3e}",
+            "t_collective_s": f"{t['collective']:.3e}",
+            "bottleneck": r["bottleneck"],
+            "roofline_frac": f"{frac:.3f}",
+            "useful_flops": (f"{r['useful_flops_ratio']:.2f}"
+                             if r.get("useful_flops_ratio") else "-"),
+            "hbm_GiB": f"{hbm:.2f}",
+        })
+    return rows
+
+
+def to_markdown(rows):
+    if not rows:
+        return "(no dry-run results found)"
+    cols = list(rows[0])
+    out = ["| " + " | ".join(cols) + " |",
+           "|" + "|".join("---" for _ in cols) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(r[c]) for c in cols) + " |")
+    return "\n".join(out)
+
+
+def main():
+    results = load()
+    for mesh in ("16x16", "2x16x16"):
+        rows = table(results, mesh)
+        print(f"\n## mesh {mesh} ({len(rows)} cells)\n")
+        print(to_markdown(rows))
+    fails = [r for r in results if "error" in r]
+    print(f"\n# {len(results) - len(fails)}/{len(results)} cells passed")
+    for f in fails:
+        print("# FAIL", f["arch"], f["shape"], f["mesh"], f["error"][:120])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark driver — one section per paper table/figure + the roofline.
+
+  conv_memory      — paper Table 3 (memory traffic) reproduction
+  conv_algorithms  — paper Fig. 5 (exec time across devices) cost-model
+  conv_arith       — paper Table 4 (arithmetic profile) + interpret wall
+  autotune         — the paper's tuning library on every ResNet layer
+  roofline         — §Roofline table from the multi-pod dry-run artifacts
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _section(title):
+    print(f"\n{'=' * 72}\n== {title}\n{'=' * 72}", flush=True)
+
+
+def main() -> None:
+    t0 = time.time()
+    from benchmarks import conv_algorithms, conv_arith, conv_memory, roofline
+
+    _section("paper Table 3: global-memory traffic (analytic vs measured)")
+    conv_memory.main()
+
+    _section("paper Fig. 5: algorithm x layer x device (roofline cost model)")
+    conv_algorithms.main()
+
+    _section("paper Table 4: arithmetic profile + kernel wall (interpret)")
+    conv_arith.main()
+
+    _section("autotuner choices per ResNet layer (paper's tuning library)")
+    from repro.core import ConvSpec, select
+    from repro.configs.resnet import PAPER_CONV_LAYERS
+
+    print("layer,algorithm,est_us_v5e,est_bytes_MB,vmem_MB")
+    for layer in PAPER_CONV_LAYERS:
+        ch = select(ConvSpec(h=layer.h, w=layer.w, c=layer.c_in, k=layer.c_out))
+        print(f"{layer.name},{ch.algorithm},{ch.est_time * 1e6:.2f},"
+              f"{ch.est_bytes / 1e6:.2f},{ch.vmem / 2 ** 20:.2f}")
+
+    _section("roofline (from dry-run artifacts)")
+    roofline.main()
+
+    print(f"\n# benchmarks done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Serving example: batched prefill + iterative decode with KV cache.
+
+Exercises every cache type by serving three reduced archs: GQA
+(granite-8b), MLA absorbed-decode (deepseek-v2), and the attention-free
+recurrent path (mamba2). Verifies served greedy tokens equal teacher-forced
+argmax — the correctness contract of the serving stack.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get, tiny_variant
+from repro.launch import steps
+from repro.launch.serve import generate
+from repro.models import lm
+
+
+def serve_one(name, batch=4, prompt_len=16, max_new=12):
+    cfg = tiny_variant(get(name)).replace(capacity_factor=8.0)
+    params = steps.init_state(cfg, 0)["params"]
+    prompts = jax.random.randint(jax.random.key(1), (batch, prompt_len), 0,
+                                 cfg.vocab_size)
+    t0 = time.perf_counter()
+    out = generate(cfg, params, prompts, max_new=max_new,
+                   cache_len=prompt_len + max_new)
+    out.block_until_ready()
+    dt = time.perf_counter() - t0
+
+    # verify against teacher forcing
+    full = jnp.concatenate([prompts, out], axis=1)
+    ref_logits, _, _ = lm.forward(params, cfg, full, mode="train")
+    ref = jnp.argmax(
+        ref_logits[:, prompt_len - 1: prompt_len - 1 + max_new,
+                   : cfg.vocab_size], -1)
+    ok = bool(jnp.all(out == ref))
+    print(f"{name:24s} {batch * max_new / dt:7.1f} tok/s (incl. compile)  "
+          f"teacher-forcing match: {ok}")
+    assert ok
+    return out
+
+
+def main():
+    for name in ("granite-8b", "deepseek-v2-236b", "mamba2-370m"):
+        serve_one(name)
+    print("all serving paths verified")
+
+
+if __name__ == "__main__":
+    main()

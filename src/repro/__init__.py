@@ -1,0 +1,10 @@
+"""repro: ILP-M convolution as a production multi-pod JAX/TPU framework.
+
+Public API surface:
+    repro.core        — conv2d / autotuner / single-image InferenceEngine
+    repro.kernels     — Pallas kernels (ilpm + the paper's 4 baselines)
+    repro.configs     — the 10 assigned architectures (+ ResNet) + shapes
+    repro.launch      — mesh / dryrun / train / serve entry points
+"""
+
+__version__ = "1.0.0"

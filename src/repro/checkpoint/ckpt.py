@@ -1,0 +1,125 @@
+"""Sharded, async, integrity-checked checkpointing.
+
+Layout per step:  <dir>/step_<N>/
+    shard_<proc>.npz   — flattened pytree leaves owned by this process
+    META.json          — step, tree paths, shapes, dtypes, digest per shard
+    COMMIT             — written last; a checkpoint without COMMIT is torn
+                         and ignored on restore (atomicity on restart).
+
+Single-process here; the per-process shard split is the multi-host layout
+(each host writes its addressable shards independently — no cross-host
+traffic at save time), which is what the 1000-node deployment needs.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=()):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flatten(tree[k], prefix + (str(k),))
+    else:
+        yield "/".join(prefix), tree
+
+
+def _unflatten(pairs):
+    root: dict = {}
+    for path, val in pairs:
+        node = root
+        keys = path.split("/")
+        for k in keys[:-1]:
+            node = node.setdefault(k, {})
+        node[keys[-1]] = val
+    return root
+
+
+class CheckpointManager:
+    def __init__(self, directory, keep: int = 3, async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._pending: threading.Thread | None = None
+
+    # ------------------------------------------------------------ save
+    def save(self, step: int, tree) -> None:
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if self.async_save:
+            self.wait()
+            self._pending = threading.Thread(
+                target=self._write, args=(step, host_tree), daemon=True)
+            self._pending.start()
+        else:
+            self._write(step, host_tree)
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _write(self, step: int, host_tree):
+        proc = jax.process_index()
+        tmp = self.dir / f".tmp_step_{step}"
+        final = self.dir / f"step_{step}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        flat = dict(_flatten(host_tree))
+        shard = tmp / f"shard_{proc}.npz"
+        np.savez(shard, **flat)
+        digest = hashlib.sha256(shard.read_bytes()).hexdigest()
+        meta = {"step": step,
+                "paths": sorted(flat),
+                "shapes": {k: list(v.shape) for k, v in flat.items()},
+                "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+                "digest": {f"shard_{proc}.npz": digest}}
+        (tmp / "META.json").write_text(json.dumps(meta))
+        (tmp / "COMMIT").write_text("ok")
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    # --------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            if (p / "COMMIT").exists():
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self):
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int | None = None, *, verify: bool = True):
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            return None, None
+        d = self.dir / f"step_{step}"
+        meta = json.loads((d / "META.json").read_text())
+        proc = jax.process_index()
+        shard = d / f"shard_{proc}.npz"
+        if verify:
+            digest = hashlib.sha256(shard.read_bytes()).hexdigest()
+            want = meta["digest"].get(shard.name)
+            if want and digest != want:
+                raise IOError(f"checkpoint {d} failed integrity check")
+        with np.load(shard) as z:
+            tree = _unflatten([(k, z[k]) for k in z.files])
+        return step, tree

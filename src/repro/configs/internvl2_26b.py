@@ -1,0 +1,27 @@
+"""internvl2-26b — InternVL2 26B VLM: InternViT-6B frontend + InternLM2-20B LM.
+
+[arXiv:2404.16821; hf] backbone: 48L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=92553. Per the assignment spec the modality frontend is a STUB —
+``input_specs()`` feeds precomputed patch embeddings concatenated with token
+embeddings. The real patch-embed conv path exists in models/frontends.py and
+routes through the ILP-M conv when enabled.
+"""
+from repro.configs.base import ArchConfig, register
+
+INTERNVL2_26B = register(ArchConfig(
+    name="internvl2-26b",
+    family="vlm",
+    num_layers=48,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=92553,
+    attn_impl="gqa",
+    act="swiglu",
+    frontend="vit_stub",
+    frontend_tokens=256,  # 448px / 14 patch -> 1024 -> pixel-shuffle x0.25
+    param_sharding="fsdp",
+    optimizer="adafactor",
+))

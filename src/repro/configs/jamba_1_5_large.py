@@ -1,0 +1,42 @@
+"""jamba-1.5-large-398b — AI21 Jamba 1.5 Large: Mamba+attention hybrid MoE.
+
+[arXiv:2403.19887; hf] 72L d_model=8192 64H (GQA kv=8) d_ff=24576
+vocab=65536, MoE 16 experts top-2. Interleave: 1 attention layer per 8
+(attention at period offset 4), MoE every other layer. Mamba sublayers carry
+the depthwise causal conv1d -> **ILP-M technique applies**
+(kernels/causal_conv1d.py). Hybrid => sub-quadratic path: runs long_500k
+(only 9/72 layers hold a 512k KV cache).
+"""
+from repro.configs.base import ArchConfig, register
+
+JAMBA_1_5_LARGE = register(ArchConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=65536,
+    attn_impl="gqa",
+    attn_layer_period=8,
+    attn_layer_offset=4,
+    num_experts=16,
+    num_shared_experts=0,
+    top_k=2,
+    moe_d_ff=24576,
+    moe_layer_period=2,
+    moe_layer_offset=1,
+    ssm_state=64,
+    ssm_conv_k=4,
+    ssm_expand=2,
+    ssm_head_dim=128,
+    ssm_ngroups=8,
+    act="swiglu",
+    supports_500k=True,
+    use_ilpm_conv=True,
+    param_sharding="fsdp",
+    optimizer="adafactor",  # 398B total params
+    param_dtype="bfloat16",  # §Perf J2: halves param HBM + wire bytes
+))

@@ -1,0 +1,32 @@
+"""mamba2-370m — Mamba-2 370M, attention-free SSD (state-space duality) LM.
+
+[arXiv:2405.21060; unverified] 48L d_model=1024 vocab=50280 ssm_state=128.
+d_inner = 2*d_model = 2048, head_dim 64 -> 32 SSM heads, depthwise causal
+conv1d k=4 — **the paper's ILP-M technique applies to this conv**
+(kernels/causal_conv1d.py). Sub-quadratic: runs the long_500k cell.
+"""
+from repro.configs.base import ArchConfig, register
+
+MAMBA2_370M = register(ArchConfig(
+    name="mamba2-370m",
+    family="ssm",
+    num_layers=48,
+    d_model=1024,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab_size=50280,
+    attn_impl="none",
+    pos_emb="none",
+    ssm_state=128,
+    ssm_conv_k=4,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_ngroups=1,
+    ssd_chunk=256,
+    tie_embeddings=True,
+    supports_500k=True,
+    use_ilpm_conv=True,
+    param_sharding="fsdp",
+))

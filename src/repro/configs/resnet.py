@@ -1,0 +1,64 @@
+"""ResNet configs — the paper's own evaluation network (Table 2).
+
+All non-1x1 conv layers of ResNet are 3x3; the paper benchmarks conv2.x
+through conv5.x on 224x224 ImageNet inputs (so 56/28/14/7 spatial sizes).
+These configs drive the conv-algorithm benchmarks and the single-image
+inference engine examples.
+"""
+from dataclasses import dataclass, field
+
+from repro.configs.base import ArchConfig, register
+
+
+@dataclass(frozen=True)
+class ConvLayerSpec:
+    """One benchmarked conv layer: C in, K out, HxW spatial, RxS filter."""
+    name: str
+    c_in: int
+    c_out: int
+    h: int
+    w: int
+    r: int = 3
+    s: int = 3
+    stride: int = 1
+    count: int = 1  # occurrences in the net
+
+
+# Paper Table 2: the 3x3 conv layers of ResNet (C=K, square images).
+PAPER_CONV_LAYERS = (
+    ConvLayerSpec("conv2.x", 64, 64, 56, 56),
+    ConvLayerSpec("conv3.x", 128, 128, 28, 28),
+    ConvLayerSpec("conv4.x", 256, 256, 14, 14),
+    ConvLayerSpec("conv5.x", 512, 512, 7, 7),
+)
+
+# Per-variant block counts for the basic-block nets (paper Table 2 columns).
+RESNET_BLOCKS = {
+    "resnet18": (2, 2, 2, 2),
+    "resnet34": (3, 4, 6, 3),
+    "resnet50": (3, 4, 6, 3),
+    "resnet101": (3, 4, 23, 3),
+    "resnet152": (3, 8, 36, 3),
+}
+
+RESNET18 = register(ArchConfig(
+    name="resnet18",
+    family="cnn",
+    num_layers=18,
+    vocab_size=1000,  # ImageNet classes
+    use_ilpm_conv=True,
+    dtype="float32",
+    param_sharding="replicated",
+    extra={"blocks": (2, 2, 2, 2), "bottleneck": False, "img": 224},
+))
+
+RESNET50 = register(ArchConfig(
+    name="resnet50",
+    family="cnn",
+    num_layers=50,
+    vocab_size=1000,
+    use_ilpm_conv=True,
+    dtype="float32",
+    param_sharding="replicated",
+    extra={"blocks": (3, 4, 6, 3), "bottleneck": True, "img": 224},
+))

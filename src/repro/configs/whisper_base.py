@@ -1,0 +1,32 @@
+"""whisper-base — OpenAI Whisper base: encoder-decoder audio transformer.
+
+[arXiv:2212.04356; unverified] 6L(enc)+6L(dec) d_model=512 8H d_ff=2048
+vocab=51865. Conv frontend (2x conv1d stride 1,2) is a STUB per assignment —
+``input_specs()`` provides precomputed 1500 frame embeddings. The real stem
+lives in models/frontends.py and uses the ILP-M conv1d when enabled.
+Full MHA (kv=8 == heads), GELU MLP, learned positions — the paper-faithful
+whisper block. Decode shapes exercise self-attn KV cache + fixed cross-attn
+cache.
+"""
+from repro.configs.base import ArchConfig, register
+
+WHISPER_BASE = register(ArchConfig(
+    name="whisper-base",
+    family="audio",
+    num_layers=6,
+    num_encoder_layers=6,
+    is_encoder_decoder=True,
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=51865,
+    attn_impl="gqa",
+    act="gelu_mlp",
+    pos_emb="learned",
+    frontend="audio_stub",
+    frontend_tokens=1500,
+    encoder_seq=1500,
+    param_sharding="fsdp",
+))

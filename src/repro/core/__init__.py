@@ -1,0 +1,11 @@
+"""ILP-M convolution as a first-class framework feature.
+
+The paper's primary contribution (instruction-level-parallelism-maximizing
+convolution for single-image inference) lives here: the algorithm registry
+(`conv2d`), the autotuner (the paper's §5 tuning library, TPU cost model),
+the ConvSpec key, and the single-image inference engine.
+"""
+from repro.core.algorithms import conv2d  # noqa: F401
+from repro.core.autotune import select, cost_model_select, measured_select  # noqa: F401
+from repro.core.convspec import ConvSpec  # noqa: F401
+from repro.core.engine import InferenceEngine  # noqa: F401

@@ -1,0 +1,59 @@
+"""Public convolution entry point with algorithm selection.
+
+``conv2d(x, w, algorithm=...)`` is how the framework consumes the paper's
+contribution: 'ilpm' | 'direct' | 'im2col' | 'libdnn' | 'winograd' run the
+corresponding kernels; 'auto' asks the autotuner; 'xla' is the
+lax.conv_general_dilated escape hatch (used for 1x1/strided convs where the
+paper's algorithms don't apply).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autotune
+from repro.core.convspec import ConvSpec
+from repro.kernels import ops, ref
+
+
+def conv2d(x, w, *, stride=1, padding="SAME", algorithm="auto", impl="auto"):
+    """x: (B,H,W,C) NHWC; w: (R,S,C,K) HWIO -> (B,H',W',K)."""
+    R, S, C, K = w.shape
+    if algorithm == "xla":
+        return ref.conv2d_reference(x, w, stride=stride, padding=padding)
+
+    if stride != 1:
+        if (R, S) == (stride, stride) and padding == "VALID":
+            # non-overlapping patch conv (ViT patch embed): degenerate ILP-M
+            # — a single "tap block", i.e. reshape + matmul, K on lanes.
+            B, H, W, _ = x.shape
+            hp, wp = H // stride, W // stride
+            xr = x[:, :hp * stride, :wp * stride].reshape(
+                B, hp, stride, wp, stride, C).transpose(0, 1, 3, 2, 4, 5)
+            xr = xr.reshape(B, hp * wp, stride * stride * C)
+            y = jnp.einsum("bpc,ck->bpk", xr, w.reshape(-1, K))
+            return y.reshape(B, hp, wp, K)
+        # general strided conv: outside the paper's scope (its layers are
+        # stride-1 3x3) — XLA path, noted in DESIGN.md
+        return ref.conv2d_reference(x, w, stride=stride, padding=padding)
+
+    if padding == "SAME":
+        xp = ref.pad_same(x, R, S)
+    elif padding == "VALID":
+        xp = x
+    else:
+        raise ValueError(padding)
+
+    if algorithm == "auto":
+        spec = ConvSpec.from_tensors(x, w, stride)
+        choice = autotune.select(spec)
+        algorithm, params = choice.algorithm, dict(choice.params)
+    else:
+        params = {}
+
+    if algorithm == "winograd":
+        H, W = xp.shape[1] - R + 1, xp.shape[2] - S + 1
+        if (R, S) != (3, 3) or H % 2 or W % 2:
+            algorithm = "ilpm"  # winograd F(2,3) inapplicable -> best direct
+    fn = ops.ALGORITHMS[algorithm]
+    return fn(xp, w, impl=impl, **params)

@@ -1,0 +1,147 @@
+"""Auto-tuning library — the paper implements one for its OpenCL kernels
+(§5: "we also implemented an auto-tuning library to choose the optimal
+combination of the kernel parameters"); this is its TPU analogue.
+
+Two modes:
+  * cost-model (default): per-algorithm HBM-traffic + FLOP + VMEM model on
+    v5e constants; picks the feasible candidate with the lowest roofline
+    time max(t_compute, t_memory). Runs at trace time, no hardware needed.
+  * measured: times candidates (CPU interpret mode here, real TPU wall-clock
+    in production) and picks the fastest — the paper's actual procedure.
+
+Results are memoized per ConvSpec: tune once per network, then reuse — the
+paper's §2.3 engineering argument that inference justifies per-shape tuning.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+from repro.core.convspec import ConvSpec
+
+# TPU v5e per-chip constants (also used by the roofline analysis)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9
+VMEM_BYTES = 16 * 2 ** 20  # ~16 MB usable
+
+
+@dataclass(frozen=True)
+class Choice:
+    algorithm: str
+    params: tuple  # ((name, value), ...)
+    est_time: float
+    est_bytes: int
+    est_flops: int
+    vmem: int
+
+
+def _el(spec):
+    return 2 if "16" in spec.dtype else 4
+
+
+def _candidates(spec: ConvSpec):
+    """Enumerate (algorithm, params, hbm_bytes, flops, vmem_working_set)."""
+    el = _el(spec)
+    B, H, W, C, K, R, S = (spec.batch, spec.out_h, spec.out_w, spec.c,
+                           spec.k, spec.r, spec.s)
+    img = B * (H + R - 1) * (W + S - 1) * C * el
+    filt = R * S * C * K * el
+    out = B * H * W * K * el
+    P = H * W
+    cands = []
+
+    # --- ilpm: image resident; filters streamed once; K-tiled grid ---
+    for tk in (128, 256, 512):
+        tk = min(tk, K)
+        vmem = (img // max(B, 1)) + R * S * C * tk * el + P * tk * 4
+        cands.append(("ilpm", (("block_k", tk),), img + filt + out,
+                      spec.flops, vmem))
+        if tk == K:
+            break
+
+    # --- direct: filters resident; image row-bands streamed ---
+    for th in (4, 8, 16):
+        th = min(th, H)
+        band = B * -(-H // th) * (th + R - 1) * (W + S - 1) * C * el
+        vmem = (th + R - 1) * (W + S - 1) * C * el + filt + th * W * K * 4
+        cands.append(("direct", (("block_h", th),), band + filt + out,
+                      spec.flops, vmem))
+        if th == H:
+            break
+
+    # --- im2col: patch matrix round-trips HBM (the paper's 14.6x enemy) ---
+    patches = B * P * R * S * C * el
+    vmem = min(P, 256) * R * S * C * el + R * S * C * 128 * el + 256 * 128 * 4
+    cands.append(("im2col", (), img + patches + patches + filt + out,
+                  spec.flops, vmem))
+
+    # --- libdnn: fused; unroll redone per K tile (index-math overhead) ---
+    for tk in (128, 256):
+        tk = min(tk, K)
+        vmem = (img // max(B, 1)) + P * R * S * C * el // max(
+            -(-K // tk), 1) + R * S * C * tk * el + P * tk * 4
+        # model the redundant unroll as extra VMEM->VMEM work: ~10% flop tax
+        cands.append(("libdnn", (("block_k", tk),), img + filt + out,
+                      int(spec.flops * 1.10), vmem))
+        if tk == K:
+            break
+
+    # --- winograd F(2,3): 2.25x fewer MACs, 4x transform traffic ---
+    if (R, S) == (3, 3) and spec.stride == 1 and H % 2 == 0 and W % 2 == 0:
+        v_bytes = B * 16 * (H // 2) * (W // 2) * C * el
+        m_bytes = B * 16 * (H // 2) * (W // 2) * K * el
+        traffic = img + v_bytes + v_bytes + 16 * C * K * el + m_bytes \
+            + m_bytes + out
+        flops = 2 * B * 16 * (H // 2) * (W // 2) * C * K  # the 16 GEMMs
+        vmem = (img // max(B, 1)) + 16 * C * K * el \
+            + min((H // 2) * (W // 2), 512) * (C + K) * el
+        cands.append(("winograd", (), traffic, flops, vmem))
+    return cands
+
+
+def cost_model_select(spec: ConvSpec) -> Choice:
+    best = None
+    for algo, params, bts, flops, vmem in _candidates(spec):
+        if vmem > VMEM_BYTES:
+            continue
+        t = max(flops / PEAK_FLOPS, bts / HBM_BW)
+        if best is None or t < best.est_time:
+            best = Choice(algo, params, t, bts, flops, vmem)
+    assert best is not None, f"no feasible algorithm for {spec}"
+    return best
+
+
+def measured_select(spec: ConvSpec, x, w, *, repeats=3) -> Choice:
+    """Wall-clock tuning (the paper's procedure; interpret-mode here)."""
+    import jax
+    from repro.kernels import ops
+
+    best = None
+    for algo, params, bts, flops, vmem in _candidates(spec):
+        if vmem > VMEM_BYTES:
+            continue
+        fn = ops.ALGORITHMS[algo]
+        kw = dict(params)
+        try:
+            y = fn(x, w, impl="pallas", **kw)
+            y.block_until_ready()
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                fn(x, w, impl="pallas", **kw).block_until_ready()
+            t = (time.perf_counter() - t0) / repeats
+        except Exception:
+            continue
+        if best is None or t < best.est_time:
+            best = Choice(algo, dict(params) and params or params, t, bts,
+                          flops, vmem)
+    assert best is not None
+    return best
+
+
+_CACHE: dict[ConvSpec, Choice] = {}
+
+
+def select(spec: ConvSpec) -> Choice:
+    if spec not in _CACHE:
+        _CACHE[spec] = cost_model_select(spec)
+    return _CACHE[spec]

@@ -1,0 +1,46 @@
+"""ConvSpec: the key the autotuner and algorithm registry dispatch on."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ConvSpec:
+    h: int
+    w: int
+    c: int
+    k: int
+    r: int = 3
+    s: int = 3
+    stride: int = 1
+    batch: int = 1
+    dtype: str = "float32"
+
+    @property
+    def out_h(self):
+        return self.h // self.stride
+
+    @property
+    def out_w(self):
+        return self.w // self.stride
+
+    @property
+    def flops(self) -> int:
+        """Useful MACs x2 (stride-1 SAME)."""
+        return 2 * self.batch * self.out_h * self.out_w * self.r * self.s \
+            * self.c * self.k
+
+    @property
+    def bytes_min(self) -> int:
+        """Compulsory traffic: image in + filters in + output out."""
+        el = 2 if "16" in self.dtype else 4
+        return el * (self.batch * self.h * self.w * self.c
+                     + self.r * self.s * self.c * self.k
+                     + self.batch * self.out_h * self.out_w * self.k)
+
+    @classmethod
+    def from_tensors(cls, x, w, stride):
+        b, h, ww, c = x.shape
+        r, s, _, k = w.shape
+        return cls(h=h, w=ww, c=c, k=k, r=r, s=s, stride=stride, batch=b,
+                   dtype=str(x.dtype))

@@ -1,0 +1,81 @@
+"""Single-image CNN inference engine — the paper's deployment scenario.
+
+Wraps a CNN (ResNet here) with: per-layer algorithm tuning (once, offline —
+paper §2.3), a jitted single-image forward, and traffic/FLOP accounting per
+layer for the energy-proxy report (paper §2.2: off-chip traffic dominates
+edge energy).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autotune
+from repro.core.convspec import ConvSpec
+from repro.models import resnet
+from repro.models.spec import init_params
+
+
+@dataclass
+class LayerReport:
+    name: str
+    spec: ConvSpec
+    algorithm: str
+    est_time: float
+    est_bytes: int
+    est_flops: int
+
+
+class InferenceEngine:
+    """Tune-once, run-many single-image inference."""
+
+    def __init__(self, cfg, params=None, seed=0, algorithm="auto"):
+        assert cfg.family == "cnn"
+        self.cfg = cfg
+        self.params = params if params is not None else init_params(
+            resnet.model_specs(cfg), seed, cfg.param_dtype)
+        self.algorithm = algorithm
+        self.reports = self._tune() if algorithm == "auto" else []
+        self._fwd = jax.jit(functools.partial(
+            resnet.forward, cfg=cfg,
+            algorithm=self._tuned_algorithm()))
+
+    def _conv_specs(self):
+        """Every 3x3 conv layer's ConvSpec for the configured input size."""
+        img = self.cfg.extra["img"]
+        blocks = self.cfg.extra["blocks"]
+        widths = [64, 128, 256, 512]
+        sizes = [img // 4, img // 8, img // 16, img // 32]
+        specs = []
+        for si, n in enumerate(blocks):
+            c = widths[si]
+            h = sizes[si]
+            specs.append((f"s{si}", ConvSpec(h=h, w=h, c=c, k=c)))
+        return specs
+
+    def _tune(self):
+        out = []
+        for name, spec in self._conv_specs():
+            ch = autotune.select(spec)
+            out.append(LayerReport(name, spec, ch.algorithm, ch.est_time,
+                                   ch.est_bytes, ch.est_flops))
+        return out
+
+    def _tuned_algorithm(self):
+        if self.algorithm != "auto":
+            return self.algorithm
+        # single dominant choice (the tuner picks per-layer; the jitted
+        # forward takes one algorithm arg — per-layer dispatch goes through
+        # algorithms.conv2d('auto') inside the model)
+        return "auto"
+
+    def run(self, image):
+        """image: (H, W, 3) single image -> logits (classes,)."""
+        return self._fwd(self.params, images=image[None])[0]
+
+    def traffic_report(self):
+        """Per-stage bytes/flops — the energy proxy (DESIGN.md §7.5)."""
+        return self.reports

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+One module per algorithm (pl.pallas_call + explicit BlockSpec VMEM tiling),
+`ops.py` as the jit'd dispatch wrappers, `ref.py` as the pure-jnp oracles:
+
+    ilpm_conv      — the paper's contribution (K on lanes, taps unrolled,
+                     image VMEM-resident)
+    direct_conv    — pixel-major baseline (filter bank resident)
+    im2col_conv    — two-kernel unroll + GEMM (the HBM round-trip)
+    libdnn_conv    — fused on-the-fly unroll
+    winograd_conv  — F(2x2,3x3): transforms + 16 batched GEMMs
+    causal_conv1d  — the technique in 1D (Mamba/Jamba conv stems)
+    gemm           — tiled MXU matmul used by im2col/winograd phases
+"""
+from repro.kernels import ops, ref  # noqa: F401

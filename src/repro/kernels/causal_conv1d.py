@@ -1,0 +1,60 @@
+"""Depthwise causal conv1d — the paper's technique applied to Mamba stems.
+
+ILP-M structure in 1D: channels on the LANE dimension (the paper's
+thread->output-channel mapping), the sequence tile VMEM-resident, the k taps
+statically unrolled with one broadcast weight row per tap (one register per
+weight — the paper's register-minimization). The causal halo (k-1 leading
+elements) comes from a second BlockSpec view of the *previous* tile, so
+blocks never overlap and the pipeline stays a pure sliding window.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(xprev_ref, x_ref, w_ref, b_ref, o_ref, *, K, TL, first_tile_zero):
+    """xprev_ref/x_ref: (1, TL, C); w_ref: (K, C); o_ref: (1, TL, C)."""
+    C = x_ref.shape[-1]
+    i = pl.program_id(1)
+    halo = xprev_ref[0, TL - (K - 1):, :]               # (K-1, C)
+    halo = jnp.where(i == 0, jnp.zeros_like(halo), halo)  # causal left edge
+    xt = jnp.concatenate([halo, x_ref[0]], axis=0)       # (TL+K-1, C)
+    acc = jnp.zeros((TL, C), jnp.float32)
+    for j in range(K):  # static taps: one broadcast weight row per step
+        acc += xt[j:j + TL, :].astype(jnp.float32) * w_ref[j, :].astype(jnp.float32)
+    acc += b_ref[:].astype(jnp.float32)
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_l", "interpret"))
+def causal_conv1d(x, w, b=None, *, block_l: int = 512, interpret: bool = False):
+    """x: (B, L, C); w: (K, C); b: (C,) -> (B, L, C), causal (left-padded)."""
+    B, L, C = x.shape
+    K = w.shape[0]
+    if b is None:
+        b = jnp.zeros((C,), x.dtype)
+    tl = min(block_l, L)
+    pad = (-L) % tl
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    n = (L + pad) // tl
+    out = pl.pallas_call(
+        functools.partial(_kernel, K=K, TL=tl, first_tile_zero=True),
+        grid=(B, n),
+        in_specs=[
+            # previous tile (for the causal halo); clamped at i == 0
+            pl.BlockSpec((1, tl, C),
+                         lambda bidx, i: (bidx, jnp.maximum(i - 1, 0), 0)),
+            pl.BlockSpec((1, tl, C), lambda bidx, i: (bidx, i, 0)),
+            pl.BlockSpec((K, C), lambda bidx, i: (0, 0)),
+            pl.BlockSpec((C,), lambda bidx, i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, tl, C), lambda bidx, i: (bidx, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, L + pad, C), x.dtype),
+        interpret=interpret,
+    )(x, x, w, b)
+    return out[:, :L]

@@ -1,0 +1,75 @@
+"""Direct convolution — the paper's strongest existing baseline (§3.3).
+
+Pixel-major mapping (the paper's CONV_CACHE_FILTER structure): the grid
+walks pixel tiles; the **entire filter bank** (R,S,C,K) is the VMEM-resident
+operand (its index map ignores the pixel axis), and each grid step computes
+all K channels for its pixel rows. On a GPU this layout forces the
+shared-memory barrier per input channel; on TPU the analogous cost is VMEM
+pressure — the filter residency is R·S·C·K (2.4 MB at conv4.x, 9.4 MB at
+conv5.x) versus ILP-M's image residency (≤0.9 MB), which is what caps the
+achievable pixel-tile depth. The benchmarks expose this in the VMEM columns.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, TH, W, R, S):
+    """x_ref: (1, 1, TH+R-1, W+S-1, C) pixel row-band; w_ref: full
+    (R,S,C,K); o_ref: (1, 1, TH, W, K)."""
+    C = x_ref.shape[-1]
+    K = w_ref.shape[-1]
+    acc = jnp.zeros((TH * W, K), jnp.float32)
+    for r in range(R):
+        for s in range(S):
+            xs = x_ref[0, 0, r:r + TH, s:s + W, :].reshape(TH * W, C)
+            acc += jnp.dot(xs, w_ref[r, s],
+                           preferred_element_type=jnp.float32)
+    o_ref[0, 0] = acc.reshape(TH, W, K).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_h", "interpret"))
+def direct_conv(x_padded, w, *, block_h: int = 8, interpret: bool = False):
+    """x_padded: (B, H+R-1, W+S-1, C); w: (R,S,C,K) -> (B,H,W,K).
+
+    Row-band pixel tiles of `block_h` rows; bands overlap by the R-1 halo,
+    expressed as an element-offset index map on a (TH+R-1)-row block.
+    """
+    B, Hp, Wp, C = x_padded.shape
+    R, S, _, K = w.shape
+    H, W = Hp - R + 1, Wp - S + 1
+    th = min(block_h, H)
+    nh = pl.cdiv(H, th)
+    grid = (B, nh)
+
+    # Halo trick: pass a band of th+R-1 rows starting at row th*i. Block
+    # starts must be multiples of the block shape in Pallas's Blocked mode,
+    # so instead we pre-slice x into overlapping bands outside the kernel.
+    bands = []
+    for i in range(nh):
+        lo = min(th * i, Hp - (th + R - 1))
+        bands.append(jax.lax.dynamic_slice_in_dim(x_padded, lo, th + R - 1, 1))
+    xb = jnp.stack(bands, axis=1)  # (B, nh, th+R-1, Wp, C)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, TH=th, W=W, R=R, S=S),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, th + R - 1, Wp, C), lambda b, i: (b, i, 0, 0, 0)),
+            # filter bank resident: index map ignores the pixel axis
+            pl.BlockSpec((R, S, C, K), lambda b, i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, th, W, K), lambda b, i: (b, i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nh, th, W, K), x_padded.dtype),
+        interpret=interpret,
+    )(xb, w)
+    if nh * th == H:
+        return out.reshape(B, H, W, K)
+    # last band was clamped to start at H-th: drop its duplicated head rows
+    main = out[:, :nh - 1].reshape(B, th * (nh - 1), W, K)
+    tail = out[:, nh - 1, th * nh - H:]
+    return jnp.concatenate([main, tail], axis=1)

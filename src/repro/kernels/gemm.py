@@ -1,0 +1,59 @@
+"""Tiled GEMM Pallas kernel (clBLAS stand-in for im2col/winograd phases).
+
+Classic MXU tiling: grid (M/TM, N/TN, K/TK) with the K axis innermost; the
+output block's index map ignores k, so the fp32 accumulator tile stays in
+VMEM across the contraction (revisiting), zero-initialized at k == 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, o_ref, acc_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "block_n", "block_k",
+                                    "interpret"))
+def gemm(a, b, *, block_m=256, block_n=128, block_k=128, interpret=False):
+    """a: (M, Kc), b: (Kc, N) -> (M, N)."""
+    M, Kc = a.shape
+    _, N = b.shape
+    tm, tn, tk = min(block_m, M), min(block_n, N), min(block_k, Kc)
+    # zero-pad the contraction dim so partial K blocks never read garbage
+    if Kc % tk:
+        pad = tk - Kc % tk
+        a = jnp.pad(a, ((0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, pad), (0, 0)))
+        Kc += pad
+    grid = (pl.cdiv(M, tm), pl.cdiv(N, tn), pl.cdiv(Kc, tk))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tm, tk), lambda i, j, k: (i, k)),
+                  pl.BlockSpec((tk, tn), lambda i, j, k: (k, j))],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+        scratch_shapes=[_acc_scratch(tm, tn)],
+        interpret=interpret,
+    )(a, b)
+
+
+def _acc_scratch(tm, tn):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM((tm, tn), jnp.float32)

@@ -1,0 +1,52 @@
+"""im2col convolution — the paper's most-popular baseline (§3.1).
+
+Deliberately two separate kernels with an HBM round-trip between them,
+because that round-trip IS the algorithm's cost the paper measures
+(Table 3: the unrolled matrix is kernel_size× the input, written by the
+im2col kernel and read back by the GEMM kernel — 9.27 MB read at conv4.x
+vs ILP-M's 2.46 MB). Phase 1 unrolls patches; phase 2 is the tiled GEMM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.gemm import gemm
+
+
+def _unroll_kernel(x_ref, o_ref, *, H, W, R, S):
+    """x_ref: (1, Hp, Wp, C) full image; o_ref: (1, H*W, R*S*C)."""
+    C = x_ref.shape[-1]
+    cols = []
+    for r in range(R):
+        for s in range(S):
+            cols.append(x_ref[0, r:r + H, s:s + W, :].reshape(H * W, C))
+    o_ref[0] = jnp.concatenate(cols, axis=-1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("r", "s", "interpret"))
+def im2col_unroll(x_padded, *, r, s, interpret=False):
+    B, Hp, Wp, C = x_padded.shape
+    H, W = Hp - r + 1, Wp - s + 1
+    return pl.pallas_call(
+        functools.partial(_unroll_kernel, H=H, W=W, R=r, S=s),
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, Hp, Wp, C), lambda b: (b, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, H * W, r * s * C), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H * W, r * s * C), x_padded.dtype),
+        interpret=interpret,
+    )(x_padded)
+
+
+def im2col_conv(x_padded, w, *, interpret=False):
+    """Two-phase im2col: unroll kernel -> HBM -> GEMM kernel."""
+    B, Hp, Wp, C = x_padded.shape
+    R, S, _, K = w.shape
+    H, W = Hp - R + 1, Wp - S + 1
+    patches = im2col_unroll(x_padded, r=R, s=S, interpret=interpret)
+    out = jax.vmap(lambda p: gemm(p, w.reshape(R * S * C, K),
+                                  interpret=interpret))(patches)
+    return out.reshape(B, H, W, K)

@@ -1,0 +1,52 @@
+"""libdnn-style fused convolution — baseline (§3.1, Tschopp's OpenCL Caffe).
+
+im2col and GEMM fused in ONE kernel: each grid step builds the patch tile
+for its (pixel, K) GEMM tile **on the fly in VMEM** and immediately
+contracts it — the unrolled matrix never exists in HBM. The paper's
+critique survives the TPU port: every K-tile revisits the same pixels, so
+the unroll work (gathers + index math) is redone K/TK times — visible here
+as the re-sliced reshape per grid step versus ILP-M's single resident image.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, H, W, R, S):
+    """x_ref: (1, Hp, Wp, C); w_ref: (R*S*C, TK); o_ref: (1, H*W, TK)."""
+    C = x_ref.shape[-1]
+    # fused unroll: build the patch tile in VMEM registers...
+    cols = []
+    for r in range(R):
+        for s in range(S):
+            cols.append(x_ref[0, r:r + H, s:s + W, :].reshape(H * W, C))
+    patch = jnp.concatenate(cols, axis=-1)          # (H*W, R*S*C)
+    # ...then contract immediately (never leaves the chip)
+    o_ref[0] = jnp.dot(patch, w_ref[...],
+                       preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def libdnn_conv(x_padded, w, *, block_k: int = 128, interpret: bool = False):
+    """x_padded: (B,Hp,Wp,C); w: (R,S,C,K) -> (B,H,W,K)."""
+    B, Hp, Wp, C = x_padded.shape
+    R, S, _, K = w.shape
+    H, W = Hp - R + 1, Wp - S + 1
+    tk = min(block_k, K)
+    wf = w.reshape(R * S * C, K)
+    out = pl.pallas_call(
+        functools.partial(_kernel, H=H, W=W, R=R, S=S),
+        grid=(B, pl.cdiv(K, tk)),
+        in_specs=[
+            pl.BlockSpec((1, Hp, Wp, C), lambda b, k: (b, 0, 0, 0)),
+            pl.BlockSpec((R * S * C, tk), lambda b, k: (0, k)),
+        ],
+        out_specs=pl.BlockSpec((1, H * W, tk), lambda b, k: (b, 0, k)),
+        out_shape=jax.ShapeDtypeStruct((B, H * W, K), x_padded.dtype),
+        interpret=interpret,
+    )(x_padded, wf)
+    return out.reshape(B, H, W, K)

@@ -1,0 +1,85 @@
+"""jit'd public wrappers over the Pallas kernels, with dispatch.
+
+TPU is the TARGET; this container is CPU-only. Policy:
+  * ``impl='pallas'`` runs the Pallas kernels (interpret=True off-TPU) —
+    used by the kernel tests/benchmarks;
+  * ``impl='jnp'`` runs the structural jnp references — used inside model
+    forward passes so the 512-device dry-run lowers plain XLA HLO;
+  * ``impl='auto'`` picks pallas on TPU, jnp elsewhere.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels import causal_conv1d as _cc
+from repro.kernels import direct_conv as _dc
+from repro.kernels import ilpm_conv as _il
+from repro.kernels import im2col_conv as _im
+from repro.kernels import libdnn_conv as _lib
+from repro.kernels import winograd_conv as _wg
+from repro.kernels.gemm import gemm  # noqa: F401  (public)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _use_pallas(impl: str) -> bool:
+    if impl == "auto":
+        return _on_tpu()
+    return impl == "pallas"
+
+
+def _interp() -> bool:
+    return not _on_tpu()
+
+
+# ---- the five conv algorithms (stride-1, pre-padded inputs) ----------
+
+def ilpm(x_padded, w, *, impl="auto", block_k=128):
+    if _use_pallas(impl):
+        return _il.ilpm_conv(x_padded, w, block_k=block_k, interpret=_interp())
+    return ref.ilpm_conv(x_padded, w)
+
+
+def direct(x_padded, w, *, impl="auto", block_h=8):
+    if _use_pallas(impl):
+        return _dc.direct_conv(x_padded, w, block_h=block_h, interpret=_interp())
+    return ref.direct_conv(x_padded, w)
+
+
+def im2col(x_padded, w, *, impl="auto"):
+    if _use_pallas(impl):
+        return _im.im2col_conv(x_padded, w, interpret=_interp())
+    return ref.im2col_conv(x_padded, w)
+
+
+def libdnn(x_padded, w, *, impl="auto", block_k=128):
+    if _use_pallas(impl):
+        return _lib.libdnn_conv(x_padded, w, block_k=block_k, interpret=_interp())
+    return ref.libdnn_conv(x_padded, w)
+
+
+def winograd(x_padded, w, *, impl="auto", u=None):
+    if _use_pallas(impl):
+        return _wg.winograd_conv(x_padded, w, u=u, interpret=_interp())
+    return ref.winograd_conv(x_padded, w)
+
+
+ALGORITHMS = {"ilpm": ilpm, "direct": direct, "im2col": im2col,
+              "libdnn": libdnn, "winograd": winograd}
+
+
+# ---- 1D ops used by the model substrate ------------------------------
+
+def causal_conv1d(x, w, b=None, *, impl="auto", block_l=512):
+    """Depthwise causal conv (Mamba stem): ILP-M technique in 1D."""
+    if _use_pallas(impl):
+        return _cc.causal_conv1d(x, w, b, block_l=block_l, interpret=_interp())
+    return ref.causal_conv1d(x, w, b)
+
+
+def conv1d_dense(x, w, b=None, *, stride=1):
+    return ref.conv1d_dense(x, w, b, stride=stride)

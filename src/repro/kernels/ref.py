@@ -1,0 +1,188 @@
+"""Pure-jnp oracles for every kernel.
+
+``conv2d_reference`` (lax.conv_general_dilated) is the ground truth; each
+algorithm also has a structural reference that mirrors its data movement in
+plain jnp (patches for im2col, tap loop for ilpm, Winograd transforms) so the
+Pallas kernels can be checked against the *algorithm*, and every algorithm
+against the ground truth.
+
+Layouts: activations NHWC, filters HWIO (R, S, C, K) — the TPU adaptation of
+the paper's [C][R][S][K] coalesced layout (K minor => lane-aligned).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def conv2d_reference(x, w, *, stride=1, padding="SAME"):
+    """Ground truth. x: (B,H,W,C), w: (R,S,C,K)."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def pad_same(x, r, s):
+    """Explicit SAME (stride-1) padding so kernels see pre-padded inputs."""
+    ph, pw = (r - 1) // 2, (s - 1) // 2
+    return jnp.pad(x, ((0, 0), (ph, r - 1 - ph), (pw, s - 1 - pw), (0, 0)))
+
+
+# ----------------------------------------------------------------------
+# ILP-M: tap-major accumulation, image resident, K vectorized
+
+
+def ilpm_conv(x_padded, w):
+    """x_padded: (B, H+r-1, W+s-1, C); w: (R,S,C,K) -> (B,H,W,K).
+
+    The algorithm's structure in jnp: static loop over taps, each tap a
+    (pixels, C) @ (C, K) contraction — one weight slab per step amortized
+    over the whole image tile (the paper's workgroup_size:1 ratio).
+    """
+    R, S, C, K = w.shape
+    B, Hp, Wp, _ = x_padded.shape
+    H, W = Hp - R + 1, Wp - S + 1
+    acc = jnp.zeros((B, H * W, K), jnp.float32)
+    for r in range(R):
+        for s in range(S):
+            xs = x_padded[:, r:r + H, s:s + W, :].reshape(B, H * W, C)
+            acc = acc + jnp.einsum("bpc,ck->bpk", xs, w[r, s],
+                                   preferred_element_type=jnp.float32)
+    return acc.reshape(B, H, W, K).astype(x_padded.dtype)
+
+
+# ----------------------------------------------------------------------
+# direct: pixel-major, full filter set resident
+
+
+def direct_conv(x_padded, w):
+    """Same math, pixel-tile grid ordering; kept numerically identical —
+    the structural difference (filter-set residency) is a kernel concern."""
+    R, S, C, K = w.shape
+    B, Hp, Wp, _ = x_padded.shape
+    H, W = Hp - R + 1, Wp - S + 1
+    # gather taps then one big contraction per pixel tile (filters stationary)
+    taps = jnp.stack([x_padded[:, r:r + H, s:s + W, :]
+                      for r in range(R) for s in range(S)], axis=-2)
+    return jnp.einsum("bhwtc,tck->bhwk", taps, w.reshape(R * S, C, K),
+                      preferred_element_type=jnp.float32).astype(x_padded.dtype)
+
+
+# ----------------------------------------------------------------------
+# im2col: materialized patch matrix + GEMM (two phases)
+
+
+def im2col_unroll(x_padded, r, s):
+    """-> (B, H*W, R*S*C): the unrolled input matrix (HBM round-trip)."""
+    R, S = r, s
+    B, Hp, Wp, C = x_padded.shape
+    H, W = Hp - R + 1, Wp - S + 1
+    cols = [x_padded[:, i:i + H, j:j + W, :]
+            for i in range(R) for j in range(S)]
+    return jnp.concatenate(cols, axis=-1).reshape(B, H * W, R * S * C)
+
+
+def im2col_conv(x_padded, w):
+    R, S, C, K = w.shape
+    B, Hp, Wp, _ = x_padded.shape
+    H, W = Hp - R + 1, Wp - S + 1
+    patches = im2col_unroll(x_padded, R, S)
+    out = jnp.einsum("bpc,ck->bpk", patches, w.reshape(R * S * C, K),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, W, K).astype(x_padded.dtype)
+
+
+# libdnn = fused im2col (identical math; fusion is a kernel concern)
+libdnn_conv = im2col_conv
+
+
+# ----------------------------------------------------------------------
+# Winograd F(2x2, 3x3)
+
+_BT = np.array([[1, 0, -1, 0],
+                [0, 1, 1, 0],
+                [0, -1, 1, 0],
+                [0, 1, 0, -1]], np.float32)
+_G = np.array([[1, 0, 0],
+               [0.5, 0.5, 0.5],
+               [0.5, -0.5, 0.5],
+               [0, 0, 1]], np.float32)
+_AT = np.array([[1, 1, 1, 0],
+                [0, 1, -1, -1]], np.float32)
+
+
+def winograd_filter_transform(w):
+    """(3,3,C,K) -> U (4,4,C,K). Constant at inference (paper §5.2)."""
+    return jnp.einsum("ar,rsck,bs->abck", _G, w, _G)
+
+
+def winograd_input_transform(x_padded, H, W):
+    """Tile into 4x4 patches (stride 2) and apply B^T d B.
+
+    -> V: (B, 4, 4, nt, C) with nt = (H/2)*(W/2) output tiles.
+    """
+    Bsz, Hp, Wp, C = x_padded.shape
+    th, tw = H // 2, W // 2
+    # gather 4x4 windows at stride 2
+    d = jnp.stack([x_padded[:, 2 * i:2 * i + 4] for i in range(th)], axis=1)
+    d = jnp.stack([d[:, :, :, 2 * j:2 * j + 4] for j in range(tw)], axis=2)
+    # d: (B, th, tw, 4, 4, C)
+    v = jnp.einsum("ar,bijrsc,ds->bijadc", _BT, d, _BT)
+    return v.transpose(0, 3, 4, 1, 2, 5).reshape(Bsz, 4, 4, th * tw, C)
+
+
+def winograd_output_transform(m, H, W):
+    """m: (B,4,4,nt,K) -> (B,H,W,K) via A^T m A + tile scatter."""
+    Bsz = m.shape[0]
+    K = m.shape[-1]
+    th, tw = H // 2, W // 2
+    y = jnp.einsum("ar,brstk,ds->btadk", _AT, m, _AT)  # (B, nt, 2, 2, K)
+    y = y.reshape(Bsz, th, tw, 2, 2, K).transpose(0, 1, 3, 2, 4, 5)
+    return y.reshape(Bsz, H, W, K)
+
+
+def winograd_conv(x_padded, w):
+    """Full F(2x2,3x3) pipeline; requires even H, W."""
+    R, S, C, K = w.shape
+    assert (R, S) == (3, 3), "winograd F(2,3) is 3x3-only"
+    B, Hp, Wp, _ = x_padded.shape
+    H, W = Hp - 2, Wp - 2
+    assert H % 2 == 0 and W % 2 == 0, "even output dims required"
+    u = winograd_filter_transform(w)                      # (4,4,C,K)
+    v = winograd_input_transform(x_padded, H, W)          # (B,4,4,nt,C)
+    m = jnp.einsum("bxytc,xyck->bxytk", v, u,
+                   preferred_element_type=jnp.float32)    # 16 batched GEMMs
+    return winograd_output_transform(m.astype(x_padded.dtype), H, W)
+
+
+# ----------------------------------------------------------------------
+# depthwise causal conv1d (Mamba stem) — the paper's technique in 1D
+
+
+def causal_conv1d(x, w, b=None):
+    """x: (B, L, C); w: (k, C) depthwise; left-padded (causal)."""
+    k = w.shape[0]
+    acc = jnp.zeros(x.shape, jnp.float32)
+    for j in range(k):
+        shift = k - 1 - j
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        acc = acc + xs.astype(jnp.float32) * w[j].astype(jnp.float32)
+    if b is not None:
+        acc = acc + b.astype(jnp.float32)
+    return acc.astype(x.dtype)
+
+
+def conv1d_dense(x, w, b=None, *, stride=1):
+    """x: (B,L,Cin); w: (k,Cin,Cout) dense 1D conv, SAME padding."""
+    k = w.shape[0]
+    y = jax.lax.conv_general_dilated(
+        x[:, :, None, :], w[:, None], window_strides=(stride, 1),
+        padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))[:, :, 0]
+    if b is not None:
+        y = y + b
+    return y
+
+
+def gemm(a, b):
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)

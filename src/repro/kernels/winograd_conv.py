@@ -1,0 +1,120 @@
+"""Winograd F(2x2, 3x3) convolution — baseline (§3.2, Lavin & Gray).
+
+Three phases mirroring the paper's profile rows: input transform kernel
+(winograd_trans_from_image), 16 batched GEMMs (winograd_gemm x16), output
+inverse transform (winograd_trans_to_output). The filter transform is
+constant at inference and precomputed offline (paper §5.2). The transforms'
+extra HBM traffic — V is 4x the input for stride-2 4x4 tiles — is the cost
+the paper charges against Winograd on bandwidth-starved devices.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref as _ref
+from repro.kernels.gemm import gemm
+
+winograd_filter_transform = _ref.winograd_filter_transform
+
+
+def _bt_combine(rows):
+    """B^T combination along one axis: rows = [d0,d1,d2,d3] -> 4 outputs.
+
+    Winograd input transform is pure add/sub — no multiplies (the whole
+    point of the algorithm): [d0-d2, d1+d2, d2-d1, d1-d3].
+    """
+    d0, d1, d2, d3 = rows
+    return [d0 - d2, d1 + d2, d2 - d1, d1 - d3]
+
+
+def _trans_in_kernel(x_ref, o_ref, *, TH, TW):
+    """x_ref: (1, 2*TH+2, 2*TW+2, C) image; o_ref: (1, 4, 4, TH*TW, C).
+
+    B^T d B applied to 4x4 windows at stride 2, entirely in VMEM,
+    hand-coded as adds/subs (Winograd transforms have no multiplies).
+    """
+    C = x_ref.shape[-1]
+    # gather stride-2 4x4 windows: (TH, TW, 4, 4, C)
+    rows = [x_ref[0, 2 * i:2 * i + 4] for i in range(TH)]
+    d = jnp.stack(rows, axis=0)                         # (TH, 4, Wp, C)
+    cols = [d[:, :, 2 * j:2 * j + 4, :] for j in range(TW)]
+    d = jnp.stack(cols, axis=1)                          # (TH, TW, 4, 4, C)
+    r = _bt_combine([d[:, :, i] for i in range(4)])      # over the r axis
+    v = [_bt_combine([ra[:, :, j] for j in range(4)]) for ra in r]
+    v = jnp.stack([jnp.stack(vr, axis=2) for vr in v], axis=2)  # (TH,TW,4,4,C)
+    v = v.transpose(2, 3, 0, 1, 4)
+    o_ref[0] = v.reshape(4, 4, TH * TW, C).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def winograd_input_transform(x_padded, *, interpret=False):
+    """(B, H+2, W+2, C) -> V (B, 4, 4, (H/2)*(W/2), C)."""
+    B, Hp, Wp, C = x_padded.shape
+    H, W = Hp - 2, Wp - 2
+    th, tw = H // 2, W // 2
+    return pl.pallas_call(
+        functools.partial(_trans_in_kernel, TH=th, TW=tw),
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, Hp, Wp, C), lambda b: (b, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, 4, 4, th * tw, C), lambda b: (b, 0, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 4, 4, th * tw, C), x_padded.dtype),
+        interpret=interpret,
+    )(x_padded)
+
+
+def _at_combine(rows):
+    """A^T combination: [m0+m1+m2, m1-m2-m3] — again add/sub only."""
+    m0, m1, m2, m3 = rows
+    return [m0 + m1 + m2, m1 - m2 - m3]
+
+
+def _trans_out_kernel(m_ref, o_ref, *, TH, TW):
+    """m_ref: (1, 4, 4, TH*TW, K) -> o_ref: (1, 2*TH, 2*TW, K)."""
+    K = m_ref.shape[-1]
+    m = m_ref[0].astype(jnp.float32)                     # (4,4,nt,K)
+    t = _at_combine([m[i] for i in range(4)])            # 2 x (4,nt,K)
+    y = [[None, None], [None, None]]
+    for a in range(2):
+        ya = _at_combine([t[a][j] for j in range(4)])    # 2 x (nt,K)
+        y[a][0], y[a][1] = ya
+    y = jnp.stack([jnp.stack(row, axis=0) for row in y], axis=0)  # (2,2,nt,K)
+    y = y.transpose(2, 0, 1, 3).reshape(TH, TW, 2, 2, K).transpose(0, 2, 1, 3, 4)
+    o_ref[0] = y.reshape(2 * TH, 2 * TW, K).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("H", "W", "interpret"))
+def winograd_output_transform(m, *, H, W, interpret=False):
+    B = m.shape[0]
+    K = m.shape[-1]
+    th, tw = H // 2, W // 2
+    return pl.pallas_call(
+        functools.partial(_trans_out_kernel, TH=th, TW=tw),
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, 4, 4, th * tw, K), lambda b: (b, 0, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, H, W, K), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, W, K), m.dtype),
+        interpret=interpret,
+    )(m)
+
+
+def winograd_conv(x_padded, w, *, u=None, interpret=False):
+    """Full pipeline. `u` (precomputed filter transform) optional."""
+    B, Hp, Wp, C = x_padded.shape
+    R, S, _, K = w.shape
+    assert (R, S) == (3, 3)
+    H, W = Hp - 2, Wp - 2
+    assert H % 2 == 0 and W % 2 == 0, "winograd F(2,3): even output dims"
+    if u is None:
+        u = winograd_filter_transform(w)                # (4,4,C,K) offline
+    v = winograd_input_transform(x_padded, interpret=interpret)
+    # 16 batched GEMMs: (nt, C) @ (C, K) per (xi, nu)
+    vf = v.reshape(B, 16, -1, C)
+    uf = u.reshape(16, C, K)
+    m = jax.vmap(lambda vb: jax.vmap(
+        lambda vt, ut: gemm(vt, ut, interpret=interpret))(vb, uf))(vf)
+    m = m.reshape(B, 4, 4, -1, K)
+    return winograd_output_transform(m, H=H, W=W, interpret=interpret)

@@ -1,0 +1,7 @@
+"""Launch layer: mesh construction, step builders, drivers.
+
+NOTE: do NOT import repro.launch.dryrun from here — it sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 at import time and
+must only run as `python -m repro.launch.dryrun`.
+"""
+from repro.launch.mesh import make_local_mesh, make_production_mesh  # noqa: F401

@@ -1,0 +1,273 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+Lowers + compiles every (architecture x input-shape) cell on the production
+meshes — 16x16 (one pod, 256 chips) and 2x16x16 (two pods, 512 chips) — with
+ShapeDtypeStruct inputs (zero allocation), and records memory_analysis,
+cost_analysis, and the collective-bytes breakdown parsed from the HLO for
+the roofline (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+
+NOTE: the XLA_FLAGS line above MUST run before any other import (jax locks
+the device count on first init). Do not import this module from processes
+that need the real device topology.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from pathlib import Path
+
+import jax
+
+from repro.configs import ASSIGNED, applicable_shapes, get
+from repro.configs.base import SHAPES
+from repro.launch import steps
+from repro.launch.mesh import make_production_mesh
+from repro.sharding.rules import rules_for
+
+# TPU v5e constants (per chip) — roofline denominators
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8,
+                "f8e4m3fn": 1, "f8e5m2": 1, "s16": 2, "u16": 2}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in the lowered HLO."""
+    out: dict[str, int] = {}
+    for m in re.finditer(
+            r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s*"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)", hlo_text, re.I):
+        shapes, op = m.group(1), m.group(2).lower()
+        nbytes = 0
+        for dm in _SHAPE_RE.finditer(shapes):
+            dt, dims = dm.group(1), dm.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES.get(dt, 4)
+        out[op] = out.get(op, 0) + nbytes
+    return out
+
+
+def _lower_one(cfg, shape, mesh, rules):
+    """Lower + compile the right step for this shape kind."""
+    if shape.kind == "train":
+        state_structs, state_sh = steps.abstract_state(cfg, mesh, rules)
+        fn = steps.make_train_step(cfg, mesh, rules)
+        inputs = steps.input_specs(cfg, shape, mesh, rules)
+        return jax.jit(fn, out_shardings=(state_sh, None)).lower(
+            state_structs, inputs).compile()
+    state_structs, _ = steps.abstract_state(cfg, mesh, rules)
+    params_structs = state_structs["params"]
+    inputs = steps.input_specs(cfg, shape, mesh, rules)
+    if shape.kind == "prefill":
+        fn = steps.make_prefill_step(cfg, mesh, rules, cache_len=shape.seq_len)
+        return jax.jit(fn).lower(params_structs, inputs).compile()
+    fn = steps.make_decode_step(cfg, mesh, rules)
+    return jax.jit(fn).lower(params_structs, inputs["tokens"],
+                             inputs["caches"], inputs["pos"]).compile()
+
+
+def _costs_of(compiled):
+    cost = compiled.cost_analysis()
+    colls = collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "hbm_bytes": float(cost.get("bytes accessed", 0.0)),
+            "collectives": colls}
+
+
+def _combine(base, slope, n):
+    out = {"flops": base["flops"] + n * slope["flops"],
+           "hbm_bytes": base["hbm_bytes"] + n * slope["hbm_bytes"],
+           "collectives": {}}
+    for k in set(base["collectives"]) | set(slope["collectives"]):
+        out["collectives"][k] = base["collectives"].get(k, 0) \
+            + n * slope["collectives"].get(k, 0)
+    return out
+
+
+def _diff(a, b):
+    return {"flops": a["flops"] - b["flops"],
+            "hbm_bytes": a["hbm_bytes"] - b["hbm_bytes"],
+            "collectives": {k: a["collectives"].get(k, 0)
+                            - b["collectives"].get(k, 0)
+                            for k in set(a["collectives"])
+                            | set(b["collectives"])}}
+
+
+def probe_costs(cfg, shape, mesh, rules):
+    """Exact per-op costs via unrolled small probes, extrapolated to depth.
+
+    XLA's cost_analysis counts while-loop bodies once regardless of trip
+    count, so the production (scanned) program under-reports. Probes set
+    REPRO_UNROLL_SCAN=1 (every maybe_scan becomes a Python loop) on 1-2
+    layer models, then costs extrapolate linearly in the layer count —
+    exact because every per-layer term (fwd, bwd, optimizer, collectives)
+    is linear in depth.
+    """
+    os.environ["REPRO_UNROLL_SCAN"] = "1"
+    try:
+        if cfg.is_encoder_decoder:
+            f11 = _costs_of(_lower_one(cfg.replace(
+                num_encoder_layers=1, num_layers=1), shape, mesh, rules))
+            f21 = _costs_of(_lower_one(cfg.replace(
+                num_encoder_layers=2, num_layers=1), shape, mesh, rules))
+            f12 = _costs_of(_lower_one(cfg.replace(
+                num_encoder_layers=1, num_layers=2), shape, mesh, rules))
+            enc_slope, dec_slope = _diff(f21, f11), _diff(f12, f11)
+            base = _diff(_diff(f11, enc_slope), dec_slope)
+            total = _combine(_combine(base, enc_slope, cfg.num_encoder_layers),
+                             dec_slope, cfg.num_layers)
+            return total
+        from repro.models.lm import segments
+
+        segs = segments(cfg)
+        pre = cfg.first_dense_layers
+        body_len, n = len(segs[-1][0]), segs[-1][1]
+        f0 = _costs_of(_lower_one(cfg.replace(num_layers=pre), shape, mesh,
+                                  rules))
+        f1 = _costs_of(_lower_one(cfg.replace(num_layers=pre + body_len),
+                                  shape, mesh, rules))
+        return _combine(f0, _diff(f1, f0), n)
+    finally:
+        os.environ.pop("REPRO_UNROLL_SCAN", None)
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE), D = tokens processed."""
+    n = cfg.active_params() if cfg.num_experts else cfg.num_params()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return float(mult * n * tokens)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               extra_cfg: dict | None = None, probe: bool = True):
+    """Lower + compile one (arch, shape, mesh) cell; return the report."""
+    cfg = get(arch)
+    if extra_cfg:
+        cfg = cfg.replace(**extra_cfg)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for(cfg, mesh)
+    chips = mesh.size
+
+    t0 = time.time()
+    with mesh:
+        compiled = _lower_one(cfg, shape, mesh, rules)  # the production scan
+        costs = probe_costs(cfg, shape, mesh, rules) if probe else \
+            _costs_of(compiled)
+    t1 = time.time()
+
+    mem = compiled.memory_analysis()
+    coll_total = sum(costs["collectives"].values())
+    # per-device roofline terms (cost_analysis is per-partition under SPMD)
+    terms = {"compute": costs["flops"] / PEAK_FLOPS,
+             "memory": costs["hbm_bytes"] / HBM_BW,
+             "collective": coll_total / ICI_BW}
+    mf = model_flops(cfg, shape)
+    hlo_flops_global = costs["flops"] * chips
+    report = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "compile_s": round(t1 - t0, 1),
+        "per_device": {
+            "flops": costs["flops"],
+            "hbm_bytes": costs["hbm_bytes"],
+            "collective_bytes": coll_total,
+            "collectives": costs["collectives"],
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "temp_bytes_upper": getattr(mem, "temp_size_in_bytes", 0),
+        },
+        "roofline_s": terms,
+        "bottleneck": max(terms, key=terms.get),
+        "model_flops": mf,
+        "useful_flops_ratio": (mf / hlo_flops_global
+                               if hlo_flops_global else None),
+        "step_time_bound_s": max(terms.values()),
+    }
+    return report
+
+
+def run_cells(cells, *, out_path=None, extra_cfg=None):
+    results = []
+    for arch, shape_name, multi_pod in cells:
+        tag = f"{arch} x {shape_name} x {'2x16x16' if multi_pod else '16x16'}"
+        try:
+            rep = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                             extra_cfg=extra_cfg)
+            b = rep["roofline_s"]
+            hbm = (rep["per_device"]["peak_bytes"]
+                   + rep["per_device"]["argument_bytes"]) / 2 ** 30
+            print(f"PASS {tag}: compile={rep['compile_s']}s "
+                  f"bottleneck={rep['bottleneck']} "
+                  f"t=(c {b['compute']:.2e} | m {b['memory']:.2e} | "
+                  f"x {b['collective']:.2e})s "
+                  f"hbm={hbm:.2f}GiB "
+                  f"useful={rep['useful_flops_ratio'] and round(rep['useful_flops_ratio'], 2)}",
+                  flush=True)
+            results.append(rep)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            print(f"FAIL {tag}: {type(e).__name__}: {str(e)[:400]}",
+                  flush=True)
+            results.append({"arch": arch, "shape": shape_name,
+                            "mesh": "2x16x16" if multi_pod else "16x16",
+                            "error": f"{type(e).__name__}: {str(e)[:2000]}"})
+        if out_path:
+            Path(out_path).write_text(json.dumps(results, indent=1))
+    return results
+
+
+def all_cells(multi_pod: bool | None = None):
+    cells = []
+    meshes = [False, True] if multi_pod is None else [multi_pod]
+    for arch in ASSIGNED:
+        cfg = get(arch)
+        for shape in applicable_shapes(cfg):
+            for mp in meshes:
+                cells.append((arch, shape.name, mp))
+    return cells
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    if args.all:
+        cells = all_cells(None if args.both_meshes else args.multi_pod)
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        cells = [(args.arch, args.shape, mp) for mp in meshes]
+    results = run_cells(cells, out_path=args.out)
+    n_fail = sum(1 for r in results if "error" in r)
+    print(f"\n{len(results) - n_fail}/{len(results)} cells passed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,81 @@
+"""Serving driver: batched prefill + decode loop with sharded KV cache."""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get, tiny_variant
+from repro.launch import steps
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.sharding.rules import rules_for
+
+
+def generate(cfg, params, prompts, *, max_new: int, cache_len: int,
+             mesh=None, rules=None, temperature: float = 0.0, seed: int = 0):
+    """prompts: (B, S) int32 -> (B, max_new) greedy/temperature samples."""
+    prefill = jax.jit(steps.make_prefill_step(cfg, mesh, rules,
+                                              cache_len=cache_len))
+    decode = jax.jit(steps.make_decode_step(cfg, mesh, rules))
+    B, S = prompts.shape
+    logits, caches = prefill(params, {"tokens": prompts})
+    key = jax.random.key(seed)
+    outs = []
+    tok = _sample(logits[:, -1], temperature, key, cfg)
+    outs.append(tok)
+    for i in range(max_new - 1):
+        logits, caches = decode(params, tok[:, None], caches,
+                                jnp.asarray(S + i, jnp.int32))
+        key = jax.random.fold_in(key, i)
+        tok = _sample(logits[:, 0], temperature, key, cfg)
+        outs.append(tok)
+    return jnp.stack(outs, axis=1)
+
+
+def _sample(logits, temperature, key, cfg):
+    logits = logits[:, : cfg.vocab_size]
+    if temperature <= 0:
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--mesh", choices=["local", "pod", "multipod"],
+                    default="local")
+    args = ap.parse_args(argv)
+
+    cfg = get(args.arch)
+    if args.tiny:
+        cfg = tiny_variant(cfg)
+    mesh = make_local_mesh() if args.mesh == "local" else \
+        make_production_mesh(multi_pod=(args.mesh == "multipod"))
+    rules = rules_for(cfg, mesh)
+
+    with mesh:
+        params = steps.init_state(cfg, 0)["params"]
+        prompts = jax.random.randint(jax.random.key(1),
+                                     (args.batch, args.prompt_len), 0,
+                                     cfg.vocab_size)
+        t0 = time.perf_counter()
+        out = generate(cfg, params, prompts,
+                       max_new=args.max_new,
+                       cache_len=args.prompt_len + args.max_new,
+                       mesh=mesh, rules=rules)
+        out.block_until_ready()
+        dt = time.perf_counter() - t0
+    total = args.batch * args.max_new
+    print(f"generated {total} tokens in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s incl. compile)")
+    print("sample row:", out[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

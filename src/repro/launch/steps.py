@@ -1,0 +1,228 @@
+"""Step builders: train_step / prefill_step / decode_step per config.
+
+These are the functions the dry-run lowers on the production meshes and the
+train/serve drivers jit on real devices. All shardings come from the
+logical-axis rules; abstract inputs come from ``input_specs`` /
+``abstract_state`` so no full-size tensor is ever allocated off-cluster.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import encdec, lm, registry
+from repro.models import spec as pspec
+from repro.optim import schedule
+from repro.sharding.rules import logical_sharding, rules_for
+
+
+# ----------------------------------------------------------------------
+# abstract inputs per (arch x shape)
+
+
+def batch_struct(cfg: ArchConfig, shape: ShapeSpec):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32, dt = jnp.int32, jnp.dtype(cfg.dtype)
+    ft = cfg.frontend_tokens if cfg.frontend != "none" else 0
+    if shape.kind == "train" or shape.kind == "prefill":
+        out = {}
+        if cfg.is_encoder_decoder:
+            out["tokens"] = ((B, S), i32, ("batch", "seq"))
+            out["frames"] = ((B, cfg.encoder_seq, cfg.d_model), dt,
+                             ("batch", None, None))
+        elif cfg.frontend == "vlm" or cfg.frontend == "vit_stub":
+            out["tokens"] = ((B, S - ft), i32, ("batch", "seq"))
+            out["patch_embeds"] = ((B, ft, cfg.d_model), dt,
+                                   ("batch", None, None))
+        else:
+            out["tokens"] = ((B, S), i32, ("batch", "seq"))
+        if shape.kind == "train":
+            out["labels"] = ((B, S), i32, ("batch", "seq"))
+        return out
+    # decode: one new token against a cache of length S
+    return {"tokens": ((B, 1), i32, ("batch", None))}
+
+
+def _to_structs(tree, mesh, rules):
+    def leaf(v):
+        shp, dt, ax = v
+        sh = logical_sharding(ax, shp, rules, mesh) if mesh is not None else None
+        return jax.ShapeDtypeStruct(shp, dt, sharding=sh)
+    return jax.tree.map(leaf, tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3
+                        and isinstance(x[0], tuple))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, mesh=None, rules=None):
+    """Abstract (no-allocation) inputs for this cell, sharded for `mesh`."""
+    rules = rules if rules is not None else (
+        rules_for(cfg, mesh) if mesh is not None else None)
+    specs = _to_structs(batch_struct(cfg, shape), mesh, rules)
+    if shape.kind == "decode":
+        cache = registry.cache_struct(cfg, shape.global_batch, shape.seq_len)
+        specs["caches"] = _to_structs(cache, mesh, rules)
+        specs["pos"] = jax.ShapeDtypeStruct(
+            (), jnp.int32, sharding=(logical_sharding((), (), rules, mesh)
+                                     if mesh is not None else None))
+    return specs
+
+
+# ----------------------------------------------------------------------
+# train state
+
+
+def state_specs(cfg: ArchConfig):
+    params = registry.model_specs(cfg)
+    opt = optim.get(cfg.optimizer).state_specs(params, cfg.opt_state_dtype)
+    return {"params": params, "opt": opt}
+
+
+def abstract_state(cfg, mesh, rules):
+    specs = state_specs(cfg)
+    structs = pspec.abstract_params(specs, cfg.param_dtype)
+    shardings = pspec.param_shardings(specs, mesh, rules)
+    return (jax.tree.map(lambda st, sh: jax.ShapeDtypeStruct(
+        st.shape, st.dtype, sharding=sh), structs, shardings), shardings)
+
+
+def init_state(cfg, seed=0):
+    specs = state_specs(cfg)
+    return pspec.init_params(specs, seed, cfg.param_dtype)
+
+
+# ----------------------------------------------------------------------
+# loss
+
+
+def _ce_loss(logits, labels):
+    """Sharded-vocab-safe cross entropy.
+
+    No take_along_axis on the vocab axis (GSPMD would all-gather the full
+    (B,S,V) logits): the gold logit comes from a one-hot contraction and the
+    logsumexp from local reductions — both keep V sharded, reducing to tiny
+    (B,S) tensors (one all-reduce each).
+    """
+    mask = (labels >= 0).astype(jnp.float32)
+    lab = jnp.maximum(labels, 0)
+    m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    shifted = (logits - m).astype(jnp.float32)
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0].astype(jnp.float32)
+    onehot = jax.nn.one_hot(lab, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", onehot, logits,
+                      preferred_element_type=jnp.float32)
+    nll = lse - gold
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def _forward_for(cfg):
+    if cfg.is_encoder_decoder:
+        def f(params, batch, mode, rules, mesh):
+            return encdec.forward(params, cfg, batch["tokens"],
+                                  batch.get("frames"), mode=mode,
+                                  rules=rules, mesh=mesh)
+        return f
+
+    def f(params, batch, mode, rules, mesh):
+        return lm.forward(params, cfg, batch["tokens"], mode=mode,
+                          prefix_embeds=batch.get("patch_embeds"),
+                          rules=rules, mesh=mesh)
+    return f
+
+
+# ----------------------------------------------------------------------
+# steps
+
+
+def make_train_step(cfg: ArchConfig, mesh=None, rules=None, *,
+                    peak_lr=3e-4, warmup=100, total_steps=10_000,
+                    clip_norm=1.0, accum: int = 1):
+    fwd = _forward_for(cfg)
+    opt_mod = optim.get(cfg.optimizer)
+    compute_dt = jnp.dtype(cfg.dtype)
+
+    def loss_fn(params, batch):
+        # cast the f32 master tree to the compute dtype ONCE, before any
+        # use: otherwise every FSDP all-gather moves f32 over the wire and
+        # casts after (measured 2x collective bytes on the 398B config —
+        # EXPERIMENTS.md §Perf iter J1); the elementwise cast preserves
+        # shardings, so gathers downstream are bf16.
+        pc = jax.tree.map(
+            lambda p: p.astype(compute_dt) if p.dtype == jnp.float32 else p,
+            params)
+        logits, _, aux = fwd(pc, batch, "train", rules, mesh)
+        loss = _ce_loss(logits, batch["labels"])
+        total = loss + cfg.router_aux_weight * aux
+        return total, {"loss": loss, "aux": aux}
+
+    def train_step(state, batch):
+        params, opt_state = state["params"], state["opt"]
+        if accum == 1:
+            (_, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def micro(carry, mb):
+                g_acc, m_acc = carry
+                (_, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                return (jax.tree.map(jnp.add, g_acc, g),
+                        jax.tree.map(jnp.add, m_acc, m)), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+                batch)
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params)
+            zero_m = {"loss": jnp.zeros((), jnp.float32),
+                      "aux": jnp.zeros((), jnp.float32)}
+            (grads, metrics), _ = jax.lax.scan(micro, (zero_g, zero_m), mbs)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            metrics = jax.tree.map(lambda m: m / accum, metrics)
+        grads, gnorm = schedule.clip_by_global_norm(grads, clip_norm)
+        # step+1: the schedule is evaluated for the step being taken (a
+        # 0-indexed schedule would make the very first update a no-op)
+        lr = schedule.warmup_cosine(opt_state["step"] + 1, peak_lr=peak_lr,
+                                    warmup_steps=warmup,
+                                    total_steps=total_steps)
+        new_params, new_opt = opt_mod.update(grads, opt_state, params, lr=lr)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, mesh=None, rules=None, *,
+                      cache_len: int = 0):
+    fwd_ed = cfg.is_encoder_decoder
+
+    def prefill_step(params, batch):
+        if fwd_ed:
+            logits, caches, _ = encdec.forward(
+                params, cfg, batch["tokens"], batch.get("frames"),
+                mode="prefill", cache_len=cache_len, rules=rules, mesh=mesh)
+        else:
+            logits, caches, _ = lm.forward(
+                params, cfg, batch["tokens"], mode="prefill",
+                prefix_embeds=batch.get("patch_embeds"),
+                cache_len=cache_len, rules=rules, mesh=mesh)
+        return logits, caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, mesh=None, rules=None):
+    def decode_step(params, tokens, caches, pos):
+        if cfg.is_encoder_decoder:
+            logits, caches, _ = encdec.forward(
+                params, cfg, tokens, None, mode="decode", caches=caches,
+                pos=pos, rules=rules, mesh=mesh)
+        else:
+            logits, caches, _ = lm.forward(
+                params, cfg, tokens, mode="decode", caches=caches, pos=pos,
+                rules=rules, mesh=mesh)
+        return logits, caches
+
+    return decode_step

@@ -1,0 +1,89 @@
+"""Production train driver.
+
+Wires the full stack: config -> mesh -> sharded state -> resilient train
+loop (checkpoint/restart, straggler watch, deterministic data). On real
+TPU pods this runs under `python -m repro.launch.train --arch ... --mesh
+16x16`; on this CPU container it runs the reduced configs end-to-end.
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get, tiny_variant
+from repro.data import TokenPipeline
+from repro.launch import steps
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.runtime import StragglerWatch, resilient_train
+from repro.sharding.rules import rules_for
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--tiny", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", choices=["local", "pod", "multipod"],
+                    default="local")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    logging.basicConfig(level=logging.INFO)
+
+    cfg = get(args.arch)
+    if args.tiny:
+        cfg = tiny_variant(cfg)
+    if args.mesh == "local":
+        mesh = make_local_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multipod"))
+    rules = rules_for(cfg, mesh)
+
+    ckpt = CheckpointManager(args.ckpt_dir)
+    pipe = TokenPipeline(cfg.vocab_size, args.seq, args.batch,
+                         seed=args.seed)
+
+    with mesh:
+        train_step = jax.jit(steps.make_train_step(
+            cfg, mesh, rules, peak_lr=args.lr, warmup=min(100, args.steps // 10 + 1),
+            total_steps=args.steps))
+        start = ckpt.latest_step() or 0
+        if start:
+            _, host = ckpt.restore()
+            # re-shard the host checkpoint onto the live mesh (works across
+            # re-meshes: the specs define placement, not the old topology)
+            from repro.models import spec as pspec
+
+            shardings = pspec.param_shardings(steps.state_specs(cfg), mesh,
+                                              rules)
+            state = jax.tree.map(
+                lambda h, s: jax.device_put(h, s), host, shardings)
+            print(f"resumed from step {start}")
+        else:
+            state = steps.init_state(cfg, args.seed)
+
+        def on_metrics(step, m, dt):
+            if step % 10 == 0:
+                print(f"step {step:5d}  loss {float(m['loss']):.4f}  "
+                      f"gnorm {float(m['grad_norm']):.3f}  "
+                      f"lr {float(m['lr']):.2e}  {dt * 1e3:.0f} ms",
+                      flush=True)
+
+        state, step, fails = resilient_train(
+            state=state, train_step=train_step, pipeline=pipe, ckpt=ckpt,
+            total_steps=args.steps, start_step=start,
+            ckpt_every=args.ckpt_every, straggler=StragglerWatch(),
+            mesh=mesh, rules=rules, on_metrics=on_metrics)
+    print(f"done: step={step} restarts={fails}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""Encoder-decoder transformer (Whisper-style).
+
+Encoder consumes stub frame embeddings (the conv frontend is a STUB per the
+assignment spec; the real conv stem lives in models/frontends.py). Decoder
+blocks: causal self-attention + cross-attention + MLP, pre-LN, learned
+positions, tied unembedding — the whisper-base block structure.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.spec import ParamSpec, stack_tree
+from repro.sharding.rules import with_logical_constraint
+
+
+def _enc_block_specs(cfg):
+    return {"ln1": L.norm_spec(cfg.d_model, "ln"),
+            "attn": L.gqa_specs(cfg),
+            "ln2": L.norm_spec(cfg.d_model, "ln"),
+            "ffn": L.ffn_specs(cfg)}
+
+
+def _dec_block_specs(cfg):
+    return {"ln1": L.norm_spec(cfg.d_model, "ln"),
+            "attn": L.gqa_specs(cfg),
+            "lnx": L.norm_spec(cfg.d_model, "ln"),
+            "xattn": L.gqa_specs(cfg),
+            "ln2": L.norm_spec(cfg.d_model, "ln"),
+            "ffn": L.ffn_specs(cfg)}
+
+
+def model_specs(cfg):
+    v = L.padded_vocab(cfg.vocab_size)
+    return {
+        "embed": {
+            "table": ParamSpec((v, cfg.d_model), ("vocab", "embed_fsdp"), "embed"),
+            "pos": ParamSpec((cfg.extra.get("max_seq", 32_768), cfg.d_model),
+                             (None, "embed_fsdp"), "embed"),
+        },
+        "enc_pos": ParamSpec((cfg.encoder_seq, cfg.d_model),
+                             (None, "embed_fsdp"), "embed"),
+        "enc": stack_tree(_enc_block_specs(cfg), cfg.num_encoder_layers),
+        "enc_ln": L.norm_spec(cfg.d_model, "ln"),
+        "dec": stack_tree(_dec_block_specs(cfg), cfg.num_layers),
+        "dec_ln": L.norm_spec(cfg.d_model, "ln"),
+    }
+
+
+def encode(params, cfg, frames, *, rules=None, mesh=None):
+    """frames: (B, T_enc, E) stub embeddings -> encoder states."""
+    x = frames.astype(cfg.dtype) + params["enc_pos"][None, : frames.shape[1]].astype(cfg.dtype)
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32)[None],
+                           x.shape[:2])
+
+    def body(x, p):
+        h = L.apply_norm(p["ln1"], x, cfg.norm_eps)
+        out, _ = L.gqa_attn(p["attn"], cfg, h, pos, causal=False)
+        x = x + out
+        h = L.apply_norm(p["ln2"], x, cfg.norm_eps)
+        x = x + L.ffn(p["ffn"], cfg, h)
+        x = with_logical_constraint(x, ("batch", "seq", "embed"), rules, mesh)
+        return x, None
+
+    from repro.models.scanutil import maybe_scan
+
+    x, _ = maybe_scan(body, x, params["enc"],
+                      checkpoint=(cfg.remat == "full"))
+    return L.apply_norm(params["enc_ln"], x, cfg.norm_eps)
+
+
+def cross_kv(params, cfg, enc_out):
+    """Precompute per-layer cross-attention K,V from encoder output."""
+    def one(p):
+        dt = cfg.dtype
+        k = jnp.einsum("bse,ehd->bshd", enc_out, p["xattn"]["wk"].astype(dt))
+        v = jnp.einsum("bse,ehd->bshd", enc_out, p["xattn"]["wv"].astype(dt))
+        return {"xk": k, "xv": v}
+    from repro.models.scanutil import maybe_scan
+
+    _, out = maybe_scan(lambda c, p: (c, one(p)), 0, params["dec"])
+    return out
+
+
+def _dec_block(p, cfg, x, positions, enc_kv, enc_pos, *, mode, cache, pos,
+               rules, mesh):
+    new_cache = {}
+    h = L.apply_norm(p["ln1"], x, cfg.norm_eps)
+    if mode == "decode":
+        out, sc = L.gqa_decode(p["attn"], cfg, h, cache, pos)
+        new_cache.update(sc)
+    else:
+        out, (k, v) = L.gqa_attn(p["attn"], cfg, h, positions)
+        new_cache.update({"k": k, "v": v})
+    x = x + out
+    h = L.apply_norm(p["lnx"], x, cfg.norm_eps)
+    out, _ = L.gqa_attn(p["xattn"], cfg, h, positions, causal=False,
+                        kv=(enc_kv["xk"], enc_kv["xv"]), kv_pos=enc_pos)
+    x = x + out
+    h = L.apply_norm(p["ln2"], x, cfg.norm_eps)
+    x = x + L.ffn(p["ffn"], cfg, h)
+    x = with_logical_constraint(x, ("batch", "seq", "embed"), rules, mesh)
+    return x, new_cache
+
+
+def forward(params, cfg, tokens, frames, *, mode="train", caches=None,
+            pos=0, cache_len=0, rules=None, mesh=None):
+    """tokens: (B,S) decoder ids; frames: (B,T_enc,E) stub embeddings.
+
+    train   -> (logits (B,S,V), None, 0)
+    prefill -> (last logits, caches{self k/v padded + cross kv}, 0)
+    decode  -> (logits (B,1,V), caches, 0); frames ignored (cross kv cached)
+    """
+    from repro.sharding.rules import axis_rules
+
+    with axis_rules(rules, mesh):
+        return _forward(params, cfg, tokens, frames, mode=mode,
+                        caches=caches, pos=pos, cache_len=cache_len,
+                        rules=rules, mesh=mesh)
+
+
+def _forward(params, cfg, tokens, frames, *, mode, caches, pos, cache_len,
+             rules, mesh):
+    B, S = tokens.shape
+    positions = pos + jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(cfg.dtype)
+    x = x + jnp.take(params["embed"]["pos"], positions, axis=0).astype(cfg.dtype)
+
+    if mode == "decode":
+        enc_kv_all = caches["cross"]
+        T_enc = enc_kv_all["xk"].shape[2]
+    else:
+        enc_out = encode(params, cfg, frames, rules=rules, mesh=mesh)
+        enc_kv_all = cross_kv(params, cfg, enc_out)
+        T_enc = enc_out.shape[1]
+    enc_pos = jnp.broadcast_to(jnp.arange(T_enc, dtype=jnp.int32)[None], (B, T_enc))
+
+    def body(x, xs):
+        p, enc_kv, cache = xs
+        x, new_cache = _dec_block(p, cfg, x, positions, enc_kv, enc_pos,
+                                  mode=mode, cache=cache, pos=pos,
+                                  rules=rules, mesh=mesh)
+        if mode == "prefill" and cache_len:
+            new_cache = {k: jnp.pad(v, [(0, 0), (0, cache_len - v.shape[1]),
+                                        (0, 0), (0, 0)])
+                         for k, v in new_cache.items()}
+        return x, new_cache
+
+    from repro.models.scanutil import maybe_scan
+
+    self_caches = caches.get("self") if caches else None
+    x, new_self = maybe_scan(body, x, (params["dec"], enc_kv_all, self_caches),
+                             checkpoint=(cfg.remat == "full"
+                                         and mode == "train"))
+    x = L.apply_norm(params["dec_ln"], x, cfg.norm_eps)
+    if mode == "prefill":
+        x = x[:, -1:]
+    logits = jnp.einsum("bse,ve->bsv", x, params["embed"]["table"].astype(cfg.dtype))
+    v = logits.shape[-1]
+    logits = jnp.where(jnp.arange(v) < cfg.vocab_size, logits,
+                       jnp.finfo(logits.dtype).min)
+    logits = with_logical_constraint(logits, ("batch", "seq", "vocab_act"),
+                                     rules, mesh)
+    new_caches = None
+    if mode != "train":
+        new_caches = {"self": new_self, "cross": enc_kv_all}
+    return logits, new_caches, jnp.zeros((), jnp.float32)
+
+
+def cache_struct(cfg, batch: int, max_seq: int):
+    dt = jnp.dtype(cfg.dtype)
+    n, ne = cfg.num_layers, cfg.num_encoder_layers
+    kvd = (n, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+    xkvd = (n, batch, cfg.encoder_seq, cfg.num_kv_heads, cfg.head_dim)
+    ax = ("layer", "batch", "kv_seq", "kv_heads", None)
+    xax = ("layer", "batch", None, "kv_heads", None)
+    return {"self": {"k": (kvd, dt, ax), "v": (kvd, dt, ax)},
+            "cross": {"xk": (xkvd, dt, xax), "xv": (xkvd, dt, xax)}}

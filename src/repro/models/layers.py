@@ -1,0 +1,567 @@
+"""Transformer building blocks — pure JAX, spec-tree parameterized.
+
+Conventions:
+  activations: (batch, seq, d_model) == logical ('batch','seq','embed')
+  params: declared via ParamSpec with logical axes (see sharding/rules.py)
+  every block comes as a (specs, apply) pair; apply() is pure.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.spec import ParamSpec
+from repro.sharding.rules import constrain
+
+# full-score attention only below this Sq*Sk (else online-softmax chunking)
+_FULL_THRESH = 2048 * 2048
+
+# ----------------------------------------------------------------------
+# small utilities
+
+
+def padded_vocab(vocab: int) -> int:
+    """Megatron-style vocab padding: keeps the unembed TP-shardable."""
+    return (vocab + 511) // 512 * 512
+
+
+def rms_norm(x, w, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, w, b, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(jnp.var(x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def norm_spec(d, kind="rms"):
+    if kind == "rms":
+        return {"w": ParamSpec((d,), (None,), "ones")}
+    return {"w": ParamSpec((d,), (None,), "ones"),
+            "b": ParamSpec((d,), (None,), "zeros")}
+
+
+def apply_norm(p, x, eps):
+    if "b" in p:
+        return layer_norm(x, p["w"], p["b"], eps)
+    return rms_norm(x, p["w"], eps)
+
+
+# ----------------------------------------------------------------------
+# rotary position embedding (half-split / llama convention)
+
+
+def rope(x, positions, theta):
+    """x: (..., seq, heads, dim); positions: broadcastable to (..., seq)."""
+    dim = x.shape[-1]
+    half = dim // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# embeddings
+
+
+def embed_specs(cfg):
+    v = padded_vocab(cfg.vocab_size)
+    sp = {"table": ParamSpec((v, cfg.d_model), ("vocab", "embed_fsdp"), "embed")}
+    if cfg.pos_emb == "learned":
+        sp["pos"] = ParamSpec((cfg.extra.get("max_seq", 32_768), cfg.d_model),
+                              (None, "embed_fsdp"), "embed")
+    if not cfg.tie_embeddings:
+        sp["unembed"] = ParamSpec((cfg.d_model, v), ("embed_fsdp", "vocab"))
+    return sp
+
+
+def embed(p, cfg, tokens, positions=None):
+    x = jnp.take(p["table"], tokens, axis=0).astype(cfg.dtype)
+    if cfg.pos_emb == "learned" and positions is not None:
+        x = x + jnp.take(p["pos"], positions, axis=0).astype(cfg.dtype)
+    return x
+
+
+def unembed(p, cfg, x):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bse,ve->bsv", x, p["table"].astype(cfg.dtype))
+    else:
+        logits = jnp.einsum("bse,ev->bsv", x, p["unembed"].astype(cfg.dtype))
+    # mask the padding columns so they never receive probability mass
+    v = logits.shape[-1]
+    mask = jnp.arange(v) < cfg.vocab_size
+    return jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+
+
+# ----------------------------------------------------------------------
+# attention core: online-softmax (chunked over KV) + plain paths
+#
+# Everything stays 4D (B, S, H, D). GQA expands K/V to the full head count
+# (jnp.repeat on a replicated-or-small tensor) instead of the 5D grouped
+# reshape: (G, Hkv) dims like (8, 8) are indivisible by a 16-way model axis
+# and silently force full replication of the whole attention — the repeat
+# keeps the head axis shardable and lets XLA slice locally.
+
+
+def _attend_full(q, k, v, *, causal, q_pos, kv_pos, scale):
+    """q: (B,Sq,H,D); k/v: (B,Sk,H,D)."""
+    scores = jnp.einsum("bshd,bthd->bhst", q, k) * scale
+    scores = scores.astype(jnp.float32)
+    if causal:
+        m = q_pos[:, :, None] >= kv_pos[:, None, :]  # (B,Sq,Sk)
+        scores = jnp.where(m[:, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", w.astype(v.dtype), v)
+
+
+def _attend_chunked(q, k, v, *, causal, q_pos, kv_pos, scale, chunk):
+    """Online-softmax over KV chunks — never materializes (Sq, Sk) scores.
+
+    Memory-efficient attention (Rabe&Staats / FlashAttention recurrence) in
+    pure JAX; the production TPU path would swap in a Pallas flash kernel,
+    but the chunked-jnp form already bounds transient memory for the 32k
+    prefill shapes and lowers to the same tiled HLO structure.
+    """
+    B, Sq, H, D = q.shape
+    Dv = v.shape[-1]
+    Sk = k.shape[1]
+    n = -(-Sk // chunk)
+    pad = n * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)),
+                         constant_values=jnp.iinfo(jnp.int32).max)
+    k = k.reshape(B, n, chunk, H, D)
+    v = v.reshape(B, n, chunk, H, Dv)
+    kv_pos = kv_pos.reshape(B, n, chunk)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kc, vc, pc = xs  # (B,chunk,H,D), (B,chunk)
+        s = jnp.einsum("bshd,bthd->bhst", q, kc).astype(jnp.float32) * scale
+        valid = pc[:, None, :] <= q_pos[:, :, None] if causal else \
+            (pc < jnp.iinfo(jnp.int32).max)[:, None, :]
+        s = jnp.where(valid[:, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)  # all-masked rows
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhst,bthd->bhsd", p.astype(vc.dtype), vc).astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    from repro.models.scanutil import maybe_scan
+
+    init = (jnp.full((B, H, Sq), -jnp.inf, jnp.float32),
+            jnp.zeros((B, H, Sq), jnp.float32),
+            jnp.zeros((B, H, Sq, Dv), jnp.float32))
+    # checkpoint=True: without it the scan saves every chunk's f32 scores
+    # for backward — the full (Sq,Sk) matrix this path exists to avoid
+    (m, l, acc), _ = maybe_scan(
+        step, init,
+        (jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0),
+         jnp.moveaxis(kv_pos, 1, 0)), checkpoint=True)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 2, 1).astype(q.dtype)  # (B,Sq,H,D)
+
+
+def attention(q, k, v, *, causal, q_pos, kv_pos, chunk=2048, scale=None):
+    """Attention core. q: (B,Sq,Hq,D); k/v: (B,Sk,Hkv,D) with Hkv | Hq."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    if Hkv != Hq:  # GQA: expand KV to full heads (shardable, see above)
+        G = Hq // Hkv
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    if scale is None:
+        scale = D ** -0.5
+    if Sq * k.shape[1] <= _FULL_THRESH:
+        return _attend_full(q, k, v, causal=causal, q_pos=q_pos,
+                            kv_pos=kv_pos, scale=scale)
+    return _attend_chunked(q, k, v, causal=causal, q_pos=q_pos,
+                           kv_pos=kv_pos, scale=scale, chunk=chunk)
+
+
+# ----------------------------------------------------------------------
+# GQA attention block
+
+
+def gqa_specs(cfg):
+    E, H, KV, D = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    sp = {
+        "wq": ParamSpec((E, H, D), ("embed_fsdp", "heads", None)),
+        "wk": ParamSpec((E, KV, D), ("embed_fsdp", "kv_heads", None)),
+        "wv": ParamSpec((E, KV, D), ("embed_fsdp", "kv_heads", None)),
+        "wo": ParamSpec((H, D, E), ("heads", None, "embed_fsdp")),
+    }
+    if cfg.qkv_bias:
+        sp["bq"] = ParamSpec((H, D), ("heads", None), "zeros")
+        sp["bk"] = ParamSpec((KV, D), ("kv_heads", None), "zeros")
+        sp["bv"] = ParamSpec((KV, D), ("kv_heads", None), "zeros")
+    return sp
+
+
+def gqa_qkv(p, cfg, x, positions):
+    dt = cfg.dtype
+    q = jnp.einsum("bse,ehd->bshd", x, p["wq"].astype(dt))
+    k = jnp.einsum("bse,ehd->bshd", x, p["wk"].astype(dt))
+    v = jnp.einsum("bse,ehd->bshd", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if cfg.pos_emb == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    # seq-parallel attention: activations sharded along Sq (falls back to
+    # replication at decode where Sq == 1)
+    q = constrain(q, ("batch", "seq_shard", None, None))
+    k = constrain(k, ("batch", "seq_shard", None, None))
+    v = constrain(v, ("batch", "seq_shard", None, None))
+    return q, k, v
+
+
+def gqa_attn(p, cfg, x, positions, *, causal=True, kv=None, kv_pos=None):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v))."""
+    q, k, v = gqa_qkv(p, cfg, x, positions)
+    if kv is not None:  # cross-attention: use precomputed encoder kv
+        k, v = kv
+    kvp = kv_pos if kv_pos is not None else positions
+    out = attention(q, k, v, causal=causal, q_pos=positions, kv_pos=kvp,
+                    chunk=cfg.attn_chunk)
+    out = jnp.einsum("bshd,hde->bse", out, p["wo"].astype(cfg.dtype))
+    return out, (k, v)
+
+
+def _masked_cache_write(cache_arr, new, pos):
+    """Write `new` (B,1,...) at sequence index `pos` via an iota mask.
+
+    A dynamic-update-slice at a traced index on the model-sharded sequence
+    axis makes GSPMD all-gather the whole cache every decode step (measured
+    73.8 GiB/step/device on granite-8b decode_32k — EXPERIMENTS.md §Perf
+    iter G1). The masked select is embarrassingly local under any sharding.
+    """
+    S = cache_arr.shape[1]
+    iota = jnp.arange(S, dtype=jnp.int32).reshape(
+        (1, S) + (1,) * (cache_arr.ndim - 2))
+    return jnp.where(iota == pos, new.astype(cache_arr.dtype), cache_arr)
+
+
+def gqa_decode(p, cfg, x, cache, pos):
+    """One-token decode against a (B, Smax, KV, D) cache.
+
+    cache: {"k","v"} + scalar write index comes from pos (same for batch).
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = gqa_qkv(p, cfg, x, positions)
+    # FlashDecoding-style split-KV: the single query REPLICATES over the
+    # model axis and the computation follows the cache's sequence sharding.
+    # Without this, q inherits head-sharding from wq and GSPMD resolves the
+    # seq-vs-head conflict by replicating the whole cache in f32 (measured
+    # 2 GiB x 36 layers per step — §Perf iter G2).
+    q = constrain(q, ("batch", None, None, None))
+    k = _masked_cache_write(cache["k"], k_new, pos)
+    v = _masked_cache_write(cache["v"], v_new, pos)
+    kv_pos = jnp.broadcast_to(jnp.arange(k.shape[1], dtype=jnp.int32)[None], (B, k.shape[1]))
+    out = attention(q, k.astype(cfg.dtype), v.astype(cfg.dtype), causal=True,
+                    q_pos=positions, kv_pos=kv_pos, chunk=cfg.attn_chunk)
+    # keep the (B,1,H,D) result replicated: head-sharding demand from wo
+    # must not propagate into the seq-sharded score/value path (§Perf G2)
+    out = constrain(out, ("batch", None, None, None))
+    out = jnp.einsum("bshd,hde->bse", out, p["wo"].astype(cfg.dtype))
+    return out, {"k": k, "v": v}
+
+
+# ----------------------------------------------------------------------
+# MLA (multi-head latent attention, DeepSeek-V2)
+
+
+def mla_specs(cfg):
+    E, H = cfg.d_model, cfg.num_heads
+    qk = cfg.qk_nope_head_dim
+    qr = cfg.qk_rope_head_dim
+    vd = cfg.v_head_dim
+    L, Q = cfg.kv_lora_rank, cfg.q_lora_rank
+    return {
+        "w_dq": ParamSpec((E, Q), ("embed_fsdp", "q_lora")),
+        "q_norm": norm_spec(Q),
+        "w_uq": ParamSpec((Q, H, qk + qr), ("q_lora", "heads", None)),
+        "w_dkv": ParamSpec((E, L), ("embed_fsdp", "kv_lora")),
+        "kv_norm": norm_spec(L),
+        "w_kr": ParamSpec((E, qr), ("embed_fsdp", None)),
+        "w_uk": ParamSpec((L, H, qk), ("kv_lora", "heads", None)),
+        "w_uv": ParamSpec((L, H, vd), ("kv_lora", "heads", None)),
+        "wo": ParamSpec((H, vd, E), ("heads", None, "embed_fsdp")),
+    }
+
+
+def _mla_q(p, cfg, x, positions):
+    dt = cfg.dtype
+    cq = rms_norm(jnp.einsum("bse,eq->bsq", x, p["w_dq"].astype(dt)),
+                  p["q_norm"]["w"], cfg.norm_eps)
+    q = jnp.einsum("bsq,qhd->bshd", cq, p["w_uq"].astype(dt))
+    q_nope = q[..., : cfg.qk_nope_head_dim]
+    q_rope = rope(q[..., cfg.qk_nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, cfg, x, positions):
+    dt = cfg.dtype
+    c_kv = rms_norm(jnp.einsum("bse,el->bsl", x, p["w_dkv"].astype(dt)),
+                    p["kv_norm"]["w"], cfg.norm_eps)
+    k_r = jnp.einsum("bse,ed->bsd", x, p["w_kr"].astype(dt))
+    k_r = rope(k_r[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_r
+
+
+def mla_attn(p, cfg, x, positions):
+    """Training / prefill MLA: decompress K,V per head (non-absorbed) and
+    run the shared (chunk-capable) attention core — nope/rope folded into a
+    single concatenated inner product."""
+    dt = cfg.dtype
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c_kv, k_r = _mla_latent(p, cfg, x, positions)
+    k_nope = jnp.einsum("bsl,lhd->bshd", c_kv, p["w_uk"].astype(dt))
+    v = jnp.einsum("bsl,lhd->bshd", c_kv, p["w_uv"].astype(dt))
+    q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_cat = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_r[:, :, None],
+                                  (B, S, H, cfg.qk_rope_head_dim))], axis=-1)
+    q_cat = constrain(q_cat, ("batch", "seq_shard", None, None))
+    k_cat = constrain(k_cat, ("batch", "seq_shard", None, None))
+    v = constrain(v, ("batch", "seq_shard", None, None))
+    scale = (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5
+    out = attention(q_cat, k_cat, v, causal=True, q_pos=positions,
+                    kv_pos=positions, chunk=cfg.attn_chunk, scale=scale)
+    out = jnp.einsum("bshd,hde->bse", out, p["wo"].astype(dt))
+    return out, (c_kv, k_r)
+
+
+def mla_decode(p, cfg, x, cache, pos):
+    """Absorbed-matrix MLA decode: cache only (c_kv, k_rope) — 576 values
+    per token, the technique's KV-cache win."""
+    dt = cfg.dtype
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c_new, kr_new = _mla_latent(p, cfg, x, positions)
+    c_kv = _masked_cache_write(cache["c_kv"], c_new, pos)
+    k_r = _masked_cache_write(cache["k_rope"], kr_new, pos)
+    # absorb W_uk into q: (B,1,H,L); replicated query -> split-KV locality
+    q_lat = jnp.einsum("bshd,lhd->bshl", q_nope, p["w_uk"].astype(dt))
+    q_lat = constrain(q_lat, ("batch", None, None, None))
+    q_rope = constrain(q_rope, ("batch", None, None, None))
+    scale = (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5
+    scores = (jnp.einsum("bshl,btl->bhst", q_lat, c_kv.astype(dt))
+              + jnp.einsum("bshd,btd->bhst", q_rope, k_r.astype(dt))) * scale
+    valid = jnp.arange(c_kv.shape[1])[None, :] <= pos
+    scores = jnp.where(valid[:, None, None], scores.astype(jnp.float32), -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1).astype(dt)
+    lat_out = jnp.einsum("bhst,btl->bshl", w, c_kv.astype(dt))
+    lat_out = constrain(lat_out, ("batch", None, None, None))
+    out = jnp.einsum("bshl,lhd->bshd", lat_out, p["w_uv"].astype(dt))
+    out = jnp.einsum("bshd,hde->bse", out, p["wo"].astype(dt))
+    return out, {"c_kv": c_kv, "k_rope": k_r}
+
+
+# ----------------------------------------------------------------------
+# FFN: SwiGLU / GELU-MLP
+
+
+def ffn_specs(cfg, d_ff=None):
+    E = cfg.d_model
+    F = d_ff or cfg.d_ff
+    if cfg.act == "swiglu":
+        return {
+            "w1": ParamSpec((E, F), ("embed_fsdp", "d_ff")),
+            "w3": ParamSpec((E, F), ("embed_fsdp", "d_ff")),
+            "w2": ParamSpec((F, E), ("d_ff", "embed_fsdp")),
+        }
+    return {
+        "w1": ParamSpec((E, F), ("embed_fsdp", "d_ff")),
+        "b1": ParamSpec((F,), ("d_ff",), "zeros"),
+        "w2": ParamSpec((F, E), ("d_ff", "embed_fsdp")),
+        "b2": ParamSpec((E,), (None,), "zeros"),
+    }
+
+
+def ffn(p, cfg, x):
+    dt = cfg.dtype
+    if "w3" in p:
+        h = jax.nn.silu(x @ p["w1"].astype(dt)) * (x @ p["w3"].astype(dt))
+        return h @ p["w2"].astype(dt)
+    h = jax.nn.gelu(x @ p["w1"].astype(dt) + p["b1"].astype(dt))
+    return h @ p["w2"].astype(dt) + p["b2"].astype(dt)
+
+
+# ----------------------------------------------------------------------
+# MoE: top-k router + capacity dispatch (scatter or dense einsum)
+
+
+def moe_specs(cfg):
+    E, F, N = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    sp = {
+        "router": ParamSpec((E, N), ("embed_fsdp", None), scale=E ** -0.5),
+        "w1": ParamSpec((N, E, F), ("experts", "embed_fsdp", "moe_ff")),
+        "w3": ParamSpec((N, E, F), ("experts", "embed_fsdp", "moe_ff")),
+        "w2": ParamSpec((N, F, E), ("experts", "moe_ff", "embed_fsdp")),
+    }
+    if cfg.num_shared_experts:
+        sp["shared"] = ffn_specs(cfg, d_ff=cfg.moe_d_ff * cfg.num_shared_experts)
+    return sp
+
+
+def _expert_ffn(p, cfg, buf):
+    """buf: (experts, cap, E) -> (experts, cap, E)."""
+    dt = cfg.dtype
+    h = jax.nn.silu(jnp.einsum("xcd,xdf->xcf", buf, p["w1"].astype(dt))
+                    ) * jnp.einsum("xcd,xdf->xcf", buf, p["w3"].astype(dt))
+    return jnp.einsum("xcf,xfd->xcd", h, p["w2"].astype(dt))
+
+
+def moe(p, cfg, x, rules=None, mesh=None):
+    """Mixture of experts over (B,S,E) activations.
+
+    Returns (out, aux_loss). Dispatch impl:
+      dense   — GShard dispatch-mask einsum (exact; small/smoke configs)
+      scatter — sharding-aligned capacity dispatch (the at-scale path):
+                tokens stay in their (batch=data, seq-shard=model) groups
+                for routing/scatter (all local), and the single collective
+                is the buffer reshard group-axis->expert-axis — exactly the
+                all-to-all a hand-written expert-parallel MoE performs.
+    """
+    B, S, E = x.shape
+    dt = cfg.dtype
+    T = B * S
+    k, N = cfg.top_k, cfg.num_experts
+    logits = jnp.einsum("bse,ef->bsf", x,
+                        p["router"].astype(cfg.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)  # (B,S,k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): N * <f_i * P_i> — expressed as a
+    # one-hot reduction (partitions cleanly; a scatter here would not)
+    me = probs.mean(axis=(0, 1))
+    ce = (idx[..., None] == jnp.arange(N)).astype(jnp.float32).sum(
+        axis=(0, 1, 2)) / (T * k)
+    aux = N * jnp.sum(me * ce)
+
+    if cfg.moe_dispatch == "dense" or T * N <= 1 << 22:
+        xf = x.reshape(T, E)
+        idxf = idx.reshape(T, k)
+        gatef = gate.reshape(T, k)
+        cap = -(-max(int(cfg.capacity_factor * T * k / N), 1) // 8) * 8
+        onehot = jax.nn.one_hot(idxf, N, dtype=jnp.int32)          # (T,k,N)
+        pos = jnp.cumsum(onehot.reshape(T * k, N), axis=0).reshape(T, k, N) - 1
+        pos = (pos * onehot).sum(-1)                               # (T,k)
+        inside = pos < cap
+        # dense dispatch tensor (T, N, cap) — exact reference path
+        disp = (jax.nn.one_hot(idxf, N, dtype=dt)[..., None]
+                * jax.nn.one_hot(pos, cap, dtype=dt)[:, :, None, :]
+                * inside[..., None, None].astype(dt)).sum(1)
+        buf = jnp.einsum("tnc,te->nce", disp, xf.astype(dt))
+        out_buf = _expert_ffn(p, cfg, buf)
+        gates_tn = (jax.nn.one_hot(idxf, N, dtype=jnp.float32)
+                    * gatef[..., None]).sum(1)
+        yf = jnp.einsum("tnc,nce,tn->te", disp, out_buf, gates_tn.astype(dt))
+        y = yf.reshape(B, S, E)
+    else:
+        y = _moe_scatter_dispatch(p, cfg, x, idx, gate, mesh)
+
+    if cfg.num_shared_experts:
+        y = y + ffn(p["shared"], cfg, x)
+    return y, aux
+
+
+def _moe_scatter_dispatch(p, cfg, x, idx, gate, mesh):
+    """Sort-based (MegaBlocks-style) capacity dispatch — gathers only.
+
+    Two GSPMD facts shape this code:
+      * a b-major flatten of (B->data, S->model) is inexpressible in tiled
+        sharding (involuntary full remat), so S splits as (G, S_loc) with G
+        inheriting the model-axis sharding and (B, G) staying as batch dims;
+      * scatters whose indexed dims are sharded get replicated by the
+        partitioner, so dispatch is expressed as argsort + gathers, which
+        partition as purely local ops over the (B, G) batch dims.
+    The single collective is the explicit buffer re-constraint from
+    group-sharding to expert-sharding — the expert-parallel all-to-all.
+    """
+    dt = cfg.dtype
+    B, S, E = x.shape
+    k, N = cfg.top_k, cfg.num_experts
+    G = mesh.shape.get("model", 1) if mesh is not None and not mesh.empty else 1
+    if S % G:
+        G = 1
+    S_loc = S // G
+    L = S_loc * k
+    cap = max(int(cfg.capacity_factor * S_loc * k / N), 1)
+    cap = -(-cap // 8) * 8
+
+    xg = constrain(x.reshape(B, G, S_loc, E), ("batch", "seq_group", None, None))
+    e_flat = idx.reshape(B, G, L)                       # expert of (tok, j)
+    g_flat = gate.reshape(B, G, L)
+
+    order = jnp.argsort(e_flat, axis=-1, stable=True)   # sorted by expert
+    e_sorted = jnp.take_along_axis(e_flat, order, axis=-1)
+    counts = (e_flat[..., None] == jnp.arange(N)).astype(jnp.int32).sum(2)
+    starts = jnp.cumsum(counts, axis=-1) - counts       # (B,G,N) exclusive
+
+    # ---- dispatch: for each buffer slot (n, c), which sorted entry? ----
+    slot_n = jnp.arange(N * cap, dtype=jnp.int32) // cap
+    slot_c = jnp.arange(N * cap, dtype=jnp.int32) % cap
+    src = jnp.take_along_axis(
+        starts, jnp.broadcast_to(slot_n, (B, G, N * cap)), axis=-1) \
+        + slot_c                                          # (B,G,N*cap)
+    valid = slot_c[None, None] < jnp.take_along_axis(
+        counts, jnp.broadcast_to(slot_n, (B, G, N * cap)), axis=-1)
+    src_c = jnp.minimum(src, L - 1)
+    entry = jnp.take_along_axis(order, src_c, axis=-1)   # sorted entry -> (t,j)
+    tok = entry // k
+    xbuf = jnp.take_along_axis(
+        xg, tok[..., None], axis=2) * valid[..., None].astype(dt)
+    buf = xbuf.reshape(B, G, N, cap, E)
+    # the all-to-all: group-sharding -> expert-sharding
+    buf = constrain(buf, ("batch", None, "experts_act", None, None))
+
+    h = jax.nn.silu(jnp.einsum("bgxcd,xdf->bgxcf", buf, p["w1"].astype(dt))
+                    ) * jnp.einsum("bgxcd,xdf->bgxcf", buf, p["w3"].astype(dt))
+    out_buf = jnp.einsum("bgxcf,xfd->bgxcd", h, p["w2"].astype(dt))
+    # keep expert-sharding on the einsum OUTPUT: the constraint transposes
+    # onto the cotangent, so the weight-grad einsum sees both operands
+    # expert-sharded (else dW materializes full-size f32 per device)
+    out_buf = constrain(out_buf, ("batch", None, "experts_act", None, None))
+    out_flat = out_buf.reshape(B, G, N * cap, E)
+    # reverse all-to-all: back to group-sharding for the local combine
+    out_flat = constrain(out_flat, ("batch", "seq_group", None, None))
+
+    # ---- combine: each (tok, j) entry reads its slot back ----
+    inv = jnp.argsort(order, axis=-1)                    # entry -> sorted pos
+    rank = inv - jnp.take_along_axis(starts, e_flat, axis=-1)
+    inside = rank < cap
+    slot = jnp.minimum(e_flat * cap + rank, N * cap - 1)
+    y_ent = jnp.take_along_axis(out_flat, slot[..., None], axis=2)
+    y_ent = y_ent * (g_flat * inside.astype(jnp.float32))[..., None].astype(dt)
+    y = y_ent.reshape(B, G, S_loc, k, E).sum(3)
+    y = constrain(y, ("batch", "seq_group", None, None))
+    return y.reshape(B, S, E).astype(dt)

@@ -1,0 +1,283 @@
+"""Decoder-only LM assembly: layer planning, segment scans, decode.
+
+A config's layers are planned as (mixer, ffn) pairs — mixer ∈ {gqa, mla,
+mamba}, ffn ∈ {dense, moe, none} — then grouped into repeating *segments*
+(e.g. Jamba's 8-layer period) that run under ``jax.lax.scan`` with stacked
+parameters, keeping the lowered HLO small for 36–72 layer configs.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.spec import ParamSpec, stack_tree
+from repro.sharding.rules import with_logical_constraint
+
+Plan = tuple  # (mixer, ffn)
+
+
+# ----------------------------------------------------------------------
+# layer planning
+
+
+def layer_plan(cfg) -> list[Plan]:
+    plans = []
+    for i in range(cfg.num_layers):
+        if cfg.family == "ssm":
+            mixer = "mamba"
+        elif cfg.family == "hybrid":
+            mixer = ("gqa" if cfg.attn_layer_period and
+                     i % cfg.attn_layer_period == cfg.attn_layer_offset else "mamba")
+        else:
+            mixer = cfg.attn_impl
+        if cfg.family == "ssm":
+            ffn = "none"
+        elif (cfg.num_experts and i >= cfg.first_dense_layers
+              and i % cfg.moe_layer_period == cfg.moe_layer_offset):
+            ffn = "moe"
+        elif cfg.d_ff:
+            ffn = "dense"
+        else:
+            ffn = "none"
+        plans.append((mixer, ffn))
+    return plans
+
+
+def segments(cfg) -> list[tuple[tuple[Plan, ...], int]]:
+    """Group the layer plan into (period_body, repeat_count) segments."""
+    plans = layer_plan(cfg)
+    n = len(plans)
+    pre = cfg.first_dense_layers
+    out = [((p,), 1) for p in plans[:pre]]
+    body = plans[pre:]
+    if not body:
+        return out
+    m = len(body)
+    for p in range(1, m + 1):
+        if m % p == 0 and all(body[i] == body[i % p] for i in range(m)):
+            out.append((tuple(body[:p]), m // p))
+            return out
+    out.append((tuple(body), 1))
+    return out
+
+
+# ----------------------------------------------------------------------
+# per-layer block
+
+
+def block_specs(cfg, plan: Plan):
+    mixer, ffn_kind = plan
+    sp = {"ln1": L.norm_spec(cfg.d_model)}
+    if mixer == "gqa":
+        sp["attn"] = L.gqa_specs(cfg)
+    elif mixer == "mla":
+        sp["attn"] = L.mla_specs(cfg)
+    elif mixer == "mamba":
+        sp["mamba"] = S.mamba_specs(cfg)
+    if ffn_kind != "none":
+        sp["ln2"] = L.norm_spec(cfg.d_model)
+        sp["ffn"] = L.moe_specs(cfg) if ffn_kind == "moe" else L.ffn_specs(cfg)
+    return sp
+
+
+def cache_spec(cfg, plan: Plan, batch: int, max_seq: int):
+    """Abstract decode-cache entry for one layer (shapes + dtype)."""
+    mixer, _ = plan
+    dt = jnp.dtype(cfg.dtype)
+    if mixer in ("gqa",):
+        kvd = (batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+        return {"k": (kvd, dt, ("batch", "kv_seq", "kv_heads", None)),
+                "v": (kvd, dt, ("batch", "kv_seq", "kv_heads", None))}
+    if mixer == "mla":
+        return {"c_kv": ((batch, max_seq, cfg.kv_lora_rank), dt,
+                         ("batch", "kv_seq", None)),
+                "k_rope": ((batch, max_seq, cfg.qk_rope_head_dim), dt,
+                           ("batch", "kv_seq", None))}
+    if mixer == "mamba":
+        d_inner, G, N, P, H, Hg, conv_ch = S._dims(cfg)
+        return {"conv": ((batch, cfg.ssm_conv_k - 1, conv_ch), dt,
+                         ("batch", None, "ssm_inner")),
+                "state": ((batch, G, Hg, P, N), dt,
+                          ("batch", None, "ssm_heads", None, None))}
+    raise ValueError(mixer)
+
+
+def apply_block(p, cfg, plan: Plan, x, positions, *, mode, cache, pos,
+                rules=None, mesh=None):
+    """One layer. mode: train | prefill | decode. Returns (x, cache, aux)."""
+    mixer, ffn_kind = plan
+    aux = jnp.zeros((), jnp.float32)
+    h = L.apply_norm(p["ln1"], x, cfg.norm_eps)
+    new_cache = None
+    if mixer == "gqa":
+        if mode == "decode":
+            out, new_cache = L.gqa_decode(p["attn"], cfg, h, cache, pos)
+        else:
+            out, (k, v) = L.gqa_attn(p["attn"], cfg, h, positions)
+            if mode == "prefill":
+                new_cache = {"k": k, "v": v}
+    elif mixer == "mla":
+        if mode == "decode":
+            out, new_cache = L.mla_decode(p["attn"], cfg, h, cache, pos)
+        else:
+            out, (c_kv, k_r) = L.mla_attn(p["attn"], cfg, h, positions)
+            if mode == "prefill":
+                new_cache = {"c_kv": c_kv, "k_rope": k_r}
+    elif mixer == "mamba":
+        if mode == "decode":
+            out, new_cache = S.mamba_decode(p["mamba"], cfg, h, cache, pos)
+        else:
+            out, new_cache = S.mamba_forward(p["mamba"], cfg, h,
+                                             want_cache=(mode == "prefill"))
+    else:
+        raise ValueError(mixer)
+    x = x + out
+    if ffn_kind != "none":
+        h = L.apply_norm(p["ln2"], x, cfg.norm_eps)
+        if ffn_kind == "moe":
+            out, aux = L.moe(p["ffn"], cfg, h, rules=rules, mesh=mesh)
+        else:
+            out = L.ffn(p["ffn"], cfg, h)
+        x = x + out
+    x = with_logical_constraint(x, ("batch", "seq", "embed"), rules, mesh)
+    return x, new_cache, aux
+
+
+# ----------------------------------------------------------------------
+# cache padding: prefill caches are written for the prompt, padded to max_seq
+
+
+def _pad_cache_seq(cfg, plan, cache, max_seq):
+    mixer, _ = plan
+    if cache is None or mixer == "mamba":
+        return cache
+
+    def pad(a):
+        s = a.shape[1]
+        return jnp.pad(a, [(0, 0), (0, max_seq - s)] + [(0, 0)] * (a.ndim - 2)) \
+            if s < max_seq else a
+    return jax.tree.map(pad, cache)
+
+
+# ----------------------------------------------------------------------
+# model-level specs and forward
+
+
+def model_specs(cfg):
+    sp = {"embed": L.embed_specs(cfg), "ln_f": L.norm_spec(cfg.d_model)}
+    for si, (body, n) in enumerate(segments(cfg)):
+        subs = {f"sub{j}": block_specs(cfg, pl) for j, pl in enumerate(body)}
+        sp[f"seg{si}"] = stack_tree(subs, n) if n > 1 else subs
+    return sp
+
+
+def cache_struct(cfg, batch: int, max_seq: int):
+    """Abstract decode cache for the whole model, segment-structured."""
+    out = {}
+    for si, (body, n) in enumerate(segments(cfg)):
+        subs = {}
+        for j, pl in enumerate(body):
+            entry = cache_spec(cfg, pl, batch, max_seq)
+            if n > 1:
+                entry = {k: ((n, *shp), dt, ("layer", *ax))
+                         for k, (shp, dt, ax) in entry.items()}
+            subs[f"sub{j}"] = entry
+        out[f"seg{si}"] = subs
+    return out
+
+
+def _run_segment(p_seg, cfg, body, n, x, positions, *, mode, caches, pos,
+                 rules, mesh, cache_len=0):
+    """Run one segment (scan when n>1). caches: per-sub stacked trees."""
+    def one_period(x, p_period, cache_period):
+        new_caches = {}
+        aux = jnp.zeros((), jnp.float32)
+        for j, pl in enumerate(body):
+            c_in = cache_period.get(f"sub{j}") if cache_period else None
+            x, c_new, a = apply_block(p_period[f"sub{j}"], cfg, pl, x,
+                                      positions, mode=mode, cache=c_in,
+                                      pos=pos, rules=rules, mesh=mesh)
+            if c_new is not None and mode == "prefill" and cache_len:
+                c_new = _pad_cache_seq(cfg, pl, c_new, cache_len)
+            if c_new is not None:
+                new_caches[f"sub{j}"] = c_new
+            aux = aux + a
+        return x, new_caches, aux
+
+    if n == 1:
+        return one_period(x, p_seg, caches)
+
+    def scan_body(carry, xs):
+        x = carry
+        p_period, cache_period = xs
+        x, new_caches, aux = one_period(x, p_period, cache_period)
+        return x, (new_caches, aux)
+
+    from repro.models.scanutil import maybe_scan
+
+    xs = (p_seg, caches)
+    x, (new_caches, auxs) = maybe_scan(scan_body, x, xs, length=n,
+                                       checkpoint=(cfg.remat == "full"))
+    return x, new_caches, auxs.sum()
+
+
+def forward(params, cfg, tokens, *, mode="train", prefix_embeds=None,
+            rules=None, mesh=None, pos=0, caches=None, cache_len=0):
+    """tokens: (B, S_text). prefix_embeds: (B, S_px, E) stub frontend output.
+
+    mode=train   -> (logits (B,S,V), None, aux)
+    mode=prefill -> (last-position logits (B,1,V), caches, aux)
+    mode=decode  -> (logits (B,1,V), caches, aux); tokens (B,1)
+    """
+    from repro.sharding.rules import axis_rules
+
+    with axis_rules(rules, mesh):
+        return _forward(params, cfg, tokens, mode=mode,
+                        prefix_embeds=prefix_embeds, rules=rules, mesh=mesh,
+                        pos=pos, caches=caches, cache_len=cache_len)
+
+
+def _forward(params, cfg, tokens, *, mode, prefix_embeds, rules, mesh, pos,
+             caches, cache_len):
+    x = L.embed(params["embed"], cfg, tokens,
+                positions=_positions(tokens, pos)[..., :tokens.shape[1]]
+                if cfg.pos_emb == "learned" else None)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    positions = _positions(x, pos)
+    x = with_logical_constraint(x, ("batch", "seq", "embed"), rules, mesh)
+
+    new_caches = {}
+    aux = jnp.zeros((), jnp.float32)
+    for si, (body, n) in enumerate(segments(cfg)):
+        seg_caches = caches.get(f"seg{si}") if caches else None
+        x, c_new, a = _run_segment(params[f"seg{si}"], cfg, body, n, x,
+                                   positions, mode=mode, caches=seg_caches,
+                                   pos=pos, rules=rules, mesh=mesh,
+                                   cache_len=cache_len)
+        if c_new:
+            new_caches[f"seg{si}"] = c_new
+        aux = aux + a
+
+    x = L.apply_norm(params["ln_f"], x, cfg.norm_eps)
+    if mode == "prefill":
+        x = x[:, -1:]
+    logits = L.unembed(params["embed"], cfg, x)
+    logits = with_logical_constraint(logits, ("batch", "seq", "vocab_act"),
+                                     rules, mesh)
+    return logits, (new_caches or None), aux
+
+
+def _positions(x, pos):
+    B, S = x.shape[:2]
+    return pos + jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+
+def decode_step(params, cfg, tokens, caches, pos, *, rules=None, mesh=None):
+    """One decode step: tokens (B,1) int32, pos: scalar step index."""
+    return forward(params, cfg, tokens, mode="decode", rules=rules,
+                   mesh=mesh, pos=pos, caches=caches)

@@ -1,0 +1,93 @@
+"""ResNet (paper's evaluation network) — NHWC, inference-folded BatchNorm.
+
+Every 3x3 convolution routes through ``repro.core.algorithms`` so the whole
+net can run under any of the five algorithms the paper benchmarks (im2col,
+libdnn, winograd, direct, ilpm). This is the vehicle for the paper's Fig. 5 /
+Tables 3-4 reproduction and the single-image inference engine examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.spec import ParamSpec
+
+
+def _conv_spec(r, s, cin, cout):
+    return {"w": ParamSpec((r, s, cin, cout), (None, None, None, None)),
+            # folded BN: y = conv(x) * scale + bias
+            "scale": ParamSpec((cout,), (None,), "ones"),
+            "bias": ParamSpec((cout,), (None,), "zeros")}
+
+
+def _block_specs(cin, cout, bottleneck, stride):
+    if bottleneck:
+        mid = cout // 4
+        sp = {"c1": _conv_spec(1, 1, cin, mid),
+              "c2": _conv_spec(3, 3, mid, mid),
+              "c3": _conv_spec(1, 1, mid, cout)}
+    else:
+        sp = {"c1": _conv_spec(3, 3, cin, cout),
+              "c2": _conv_spec(3, 3, cout, cout)}
+    if stride != 1 or cin != cout:
+        sp["proj"] = _conv_spec(1, 1, cin, cout)
+    return sp
+
+
+def model_specs(cfg):
+    blocks = cfg.extra["blocks"]
+    bottleneck = cfg.extra["bottleneck"]
+    widths = [64, 128, 256, 512]
+    if bottleneck:
+        widths = [w * 4 for w in widths]
+    sp = {"stem": _conv_spec(7, 7, 3, 64)}
+    cin = 64
+    for si, (n, w) in enumerate(zip(blocks, widths)):
+        for bi in range(n):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            sp[f"s{si}b{bi}"] = _block_specs(cin, w, bottleneck, stride)
+            cin = w
+    sp["fc"] = {"w": ParamSpec((cin, cfg.vocab_size), (None, None)),
+                "b": ParamSpec((cfg.vocab_size,), (None,), "zeros")}
+    return sp
+
+
+def _conv(p, x, stride, algorithm, padding="SAME"):
+    from repro.core import algorithms
+
+    y = algorithms.conv2d(x, p["w"], stride=stride, padding=padding,
+                          algorithm=algorithm)
+    return y * p["scale"] + p["bias"]
+
+
+def _block(p, x, bottleneck, stride, algorithm):
+    idn = x
+    if "proj" in p:
+        idn = _conv(p["proj"], x, stride, "xla")  # 1x1: plain matmul path
+    if bottleneck:
+        h = jax.nn.relu(_conv(p["c1"], x, 1, "xla"))
+        h = jax.nn.relu(_conv(p["c2"], h, stride, algorithm))
+        h = _conv(p["c3"], h, 1, "xla")
+    else:
+        h = jax.nn.relu(_conv(p["c1"], x, stride, algorithm))
+        h = _conv(p["c2"], h, 1, algorithm)
+    return jax.nn.relu(h + idn)
+
+
+def forward(params, cfg, images, *, algorithm="ilpm"):
+    """images: (B,H,W,3) NHWC -> logits (B, classes).
+
+    `algorithm` selects the conv algorithm for every 3x3 conv — the paper's
+    five contenders are all valid values (plus 'xla' reference).
+    """
+    blocks = cfg.extra["blocks"]
+    bottleneck = cfg.extra["bottleneck"]
+    x = jax.nn.relu(_conv(params["stem"], images, 2, "xla"))
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    for si, n in enumerate(blocks):
+        for bi in range(n):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            x = _block(params[f"s{si}b{bi}"], x, bottleneck, stride, algorithm)
+    x = x.mean(axis=(1, 2))
+    return x @ params["fc"]["w"] + params["fc"]["b"]

@@ -1,0 +1,48 @@
+"""Scan wrapper: remat-aware, and unrollable for cost probes.
+
+Two concerns meet here:
+
+1. **Backward memory**: ``jax.lax.scan`` saves every per-iteration residual
+   for the backward pass — for the chunked-attention scan that silently
+   rematerializes the full (Sq, Sk) score matrix it was built to avoid.
+   ``checkpoint=True`` remats the body so residuals are recomputed.
+
+2. **Cost probes**: XLA's ``cost_analysis()`` counts a while-loop body ONCE
+   regardless of trip count, so scanned programs under-report FLOPs /
+   bytes / collectives. Setting ``REPRO_UNROLL_SCAN=1`` makes every
+   maybe_scan a Python loop, giving exact per-op costs on small probe
+   models (the dry-run extrapolates those to full depth — see
+   launch/dryrun.py §cost-probes).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+
+def unroll_mode() -> bool:
+    return os.environ.get("REPRO_UNROLL_SCAN") == "1"
+
+
+def maybe_scan(body, init, xs, *, length=None, checkpoint=False):
+    """lax.scan(body, init, xs) with remat + unroll-probe support."""
+    if checkpoint:
+        body = jax.checkpoint(body)
+    if not unroll_mode():
+        return jax.lax.scan(body, init, xs, length=length)
+
+    if length is None:
+        length = len(jax.tree.leaves(xs)[0])
+    carry = init
+    ys_list = []
+    for i in range(length):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys_list.append(y)
+    if all(jax.tree.leaves(y) == [] or y is None for y in ys_list):
+        ys = None
+    else:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys_list)
+    return carry, ys

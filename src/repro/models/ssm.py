@@ -1,0 +1,198 @@
+"""Mamba-2 (SSD — state-space duality) blocks in pure JAX.
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk quadratic form +
+sequential inter-chunk state pass, arXiv:2405.21060 §6); decode is the O(1)
+recurrent update. The depthwise causal conv1d routes through
+``repro.kernels.ops.causal_conv1d`` — the paper's ILP-M technique applied to
+this architecture family (channels on lanes, taps unrolled, VMEM-pinned tile).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.spec import ParamSpec
+from repro.models.layers import norm_spec, rms_norm
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    G, N, P = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_head_dim
+    H = d_inner // P
+    Hg = H // G
+    conv_ch = d_inner + 2 * G * N
+    return d_inner, G, N, P, H, Hg, conv_ch
+
+
+def mamba_specs(cfg):
+    E = cfg.d_model
+    d_inner, G, N, P, H, Hg, conv_ch = _dims(cfg)
+    d_in_proj = 2 * d_inner + 2 * G * N + H
+    return {
+        "in_proj": ParamSpec((E, d_in_proj), ("embed_fsdp", "ssm_inner")),
+        "conv_w": ParamSpec((cfg.ssm_conv_k, conv_ch), ("conv_k", "ssm_inner"),
+                            scale=cfg.ssm_conv_k ** -0.5),
+        "conv_b": ParamSpec((conv_ch,), ("ssm_inner",), "zeros"),
+        "A_log": ParamSpec((H,), ("ssm_heads",), "zeros"),  # A = -exp(0) = -1
+        "D": ParamSpec((H,), ("ssm_heads",), "ones"),
+        "dt_bias": ParamSpec((H,), ("ssm_heads",), "zeros"),
+        "norm": norm_spec(d_inner),
+        "out_proj": ParamSpec((d_inner, E), ("ssm_inner", "embed_fsdp")),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    d_inner, G, N, P, H, Hg, conv_ch = _dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:d_inner + conv_ch]
+    dt = zxbcdt[..., d_inner + conv_ch:]
+    return z, xBC, dt
+
+
+def ssd_chunked(x, dt, A, Bm, C, chunk):
+    """Chunked SSD scan.
+
+    x: (B,L,G,Hg,P)  dt: (B,L,G,Hg)  A: (G,Hg) (negative)
+    Bm, C: (B,L,G,N).  Returns (y (B,L,G,Hg,P), final_state (B,G,Hg,P,N)).
+    """
+    Bsz, L, G, Hg, P = x.shape
+    N = Bm.shape[-1]
+    nc = -(-L // chunk)
+    pad = nc * chunk - L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Q = chunk
+    xc = x.reshape(Bsz, nc, Q, G, Hg, P)
+    dtc = dt.reshape(Bsz, nc, Q, G, Hg).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, Q, G, N)
+    Cc = C.reshape(Bsz, nc, Q, G, N)
+    # chunk axis on 'model' (sequence parallelism through the SSD): keeps
+    # the (B,nc,Q,Q,G,Hg) intra-chunk decay/score tensors sharded
+    from repro.sharding.rules import constrain as _cons
+    xc = _cons(xc, ("batch", "seq_shard", None, None, None, None))
+    dtc = _cons(dtc, ("batch", "seq_shard", None, None, None))
+    Bc = _cons(Bc, ("batch", "seq_shard", None, None, None))
+    Cc = _cons(Cc, ("batch", "seq_shard", None, None, None))
+
+    dA = dtc * A.astype(jnp.float32)          # (B,nc,Q,G,Hg), <= 0
+    cum = jnp.cumsum(dA, axis=2)              # running log-decay in chunk
+
+    # --- intra-chunk (quadratic attention-like form) ---
+    # cumsums/exponents in f32 for stability; the O(L·Q) decay/score
+    # tensors are then carried in the model dtype (bf16 in production) —
+    # they are bounded (decays <= 1) and this halves the dominant HBM
+    # traffic of the whole block (§Perf iter M5)
+    CB = jnp.einsum("bcign,bcjgn->bcijg", Cc, Bc,
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    decay = jnp.exp(cum[:, :, :, None] - cum[:, :, None]).astype(x.dtype)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None, None]
+    W = jnp.where(tri, CB[..., None] * decay * dtc[:, :, None].astype(x.dtype),
+                  jnp.zeros((), x.dtype))
+    y_intra = jnp.einsum("bcijgh,bcjghp->bcighp", W, xc)
+
+    # --- per-chunk end states ---
+    decay_end = jnp.exp(cum[:, :, -1:, :, :] - cum)         # (B,nc,Q,G,Hg)
+    S = jnp.einsum("bcjgh,bcjgn,bcjghp->bcghpn",
+                   (decay_end * dtc).astype(x.dtype), Bc, xc)
+
+    # --- inter-chunk state pass: decay-matrix form (no scan) ---
+    # A lax.scan over a model-sharded chunk axis regathers the whole
+    # (B,nc,G,Hg,P,N) states tensor every iteration (measured 91 GiB per
+    # layer per device — EXPERIMENTS.md §Perf iters M1/M4). The prefix
+    # recurrence is instead evaluated as a tiny lower-triangular
+    # (nc x nc) chunk-decay matrix contraction: O(nc^2) FMAs on per-chunk
+    # states, fully parallel, one reduce over the (sharded) source-chunk
+    # axis, zero re-gathers.
+    a = jnp.cumsum(cum[:, :, -1], axis=1)                    # (B,nc,G,Hg)
+    ld = cum[:, :, -1]
+    # T_s[c, c'] = decay from end of chunk c' to start of chunk c (c' < c)
+    tri_c = jnp.tril(jnp.ones((nc, nc), bool), k=-1)
+    expo = a[:, :, None] - ld[:, :, None] - a[:, None]       # (B,nc,nc,G,Hg)
+    T_s = jnp.where(tri_c[None, :, :, None, None], jnp.exp(expo), 0.0)
+    s_start = jnp.einsum("bcdgh,bdghpn->bcghpn", T_s.astype(x.dtype), S)
+    # final state: inclusive decay to the end of the last chunk
+    T_f = jnp.exp(a[:, -1:] - a)                             # (B,nc,G,Hg)
+    s_final = jnp.einsum("bdgh,bdghpn->bghpn", T_f.astype(x.dtype), S)
+
+    y_inter = jnp.einsum("bcign,bcghpn,bcigh->bcighp",
+                         Cc, s_start, jnp.exp(cum).astype(x.dtype))
+    y = (y_intra + y_inter).reshape(Bsz, nc * Q, G, Hg, P)
+    return y[:, :L], s_final
+
+
+def mamba_forward(p, cfg, xres, *, want_cache=False):
+    """Full-sequence Mamba-2 mixer. xres: (B,L,E) (already normed)."""
+    from repro.kernels import ops as kops
+
+    dt_ = cfg.dtype
+    d_inner, G, N, P, H, Hg, conv_ch = _dims(cfg)
+    B_, L, E = xres.shape
+    zxbcdt = xres @ p["in_proj"].astype(dt_)
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC = kops.causal_conv1d(xBC, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_))
+    xBC = jax.nn.silu(xBC)
+    x = xBC[..., :d_inner].reshape(B_, L, G, Hg, P)
+    Bm = xBC[..., d_inner:d_inner + G * N].reshape(B_, L, G, N)
+    C = xBC[..., d_inner + G * N:].reshape(B_, L, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32)).reshape(B_, L, G, Hg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32)).reshape(G, Hg)
+    y, s_final = ssd_chunked(x, dt, A, Bm, C, cfg.ssd_chunk)
+    y = y + p["D"].astype(dt_).reshape(G, Hg)[..., None] * x
+    y = y.reshape(B_, L, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"]["w"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(dt_)
+    if want_cache:
+        tail = xBC_raw_tail(cfg, xres, p)  # conv window tail, pre-activation
+        return out, {"conv": tail, "state": s_final}
+    return out, None
+
+
+def xBC_raw_tail(cfg, xres, p):
+    """Last (k-1) pre-conv xBC values — the decode conv window."""
+    d_inner, G, N, P, H, Hg, conv_ch = _dims(cfg)
+    k = cfg.ssm_conv_k
+    tail_in = xres[:, -(k - 1):]
+    zxbcdt = tail_in @ p["in_proj"].astype(cfg.dtype)
+    _, xBC, _ = _split_proj(cfg, zxbcdt)
+    B_ = xres.shape[0]
+    pad = (k - 1) - tail_in.shape[1]
+    if pad > 0:
+        xBC = jnp.pad(xBC, ((0, 0), (pad, 0), (0, 0)))
+    return xBC
+
+
+def mamba_decode(p, cfg, xres, cache, pos):
+    """One-token recurrent update. cache: {conv:(B,k-1,convch),
+    state:(B,G,Hg,P,N)}."""
+    dt_ = cfg.dtype
+    d_inner, G, N, P, H, Hg, conv_ch = _dims(cfg)
+    B_ = xres.shape[0]
+    zxbcdt = xres[:, 0] @ p["in_proj"].astype(dt_)       # (B, d_in_proj)
+    z, xBC_new, dt = _split_proj(cfg, zxbcdt)
+
+    window = jnp.concatenate([cache["conv"], xBC_new[:, None]], axis=1)  # (B,k,ch)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"].astype(dt_)) \
+        + p["conv_b"].astype(dt_)
+    xBC = jax.nn.silu(conv_out)
+    x = xBC[..., :d_inner].reshape(B_, G, Hg, P)
+    Bm = xBC[..., d_inner:d_inner + G * N].reshape(B_, G, N)
+    C = xBC[..., d_inner + G * N:].reshape(B_, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32)).reshape(B_, G, Hg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32)).reshape(G, Hg)
+
+    s = cache["state"]
+    dA = jnp.exp(dt * A)[..., None, None].astype(s.dtype)     # (B,G,Hg,1,1)
+    upd = jnp.einsum("bgh,bgn,bghp->bghpn", dt.astype(dt_), Bm, x)
+    s = s * dA + upd
+    y = jnp.einsum("bgn,bghpn->bghp", C, s) \
+        + p["D"].astype(dt_).reshape(G, Hg)[..., None] * x
+    y = y.reshape(B_, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"]["w"], cfg.norm_eps)
+    out = (y @ p["out_proj"].astype(dt_))[:, None]            # (B,1,E)
+    new_cache = {"conv": window[:, 1:], "state": s}
+    return out, new_cache

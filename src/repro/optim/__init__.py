@@ -1,0 +1,5 @@
+from repro.optim import adafactor, adamw, compression, schedule  # noqa: F401
+
+
+def get(name: str):
+    return {"adamw": adamw, "adafactor": adafactor}[name]

@@ -1,0 +1,87 @@
+"""Adafactor-style optimizer: factored second moment + bf16 momentum.
+
+The HBM-fitting choice for the 236B/398B configs: the v statistics of an
+(A, B) matrix cost A+B instead of A*B (Shazeer & Stern, arXiv:1804.04235),
+so params+opt-state ≈ 6 bytes/param instead of AdamW's 12.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def init(params, state_dtype="bfloat16"):
+    dt = jnp.dtype(state_dtype)
+
+    def vrow(p):
+        return jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p.shape) \
+            else jnp.zeros(p.shape, jnp.float32)
+
+    def vcol(p):
+        return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32) \
+            if _factored(p.shape) else jnp.zeros((0,), jnp.float32)
+
+    return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params),
+            "vr": jax.tree.map(vrow, params),
+            "vc": jax.tree.map(vcol, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def update(grads, state, params, *, lr, b1=0.9, decay=0.99, eps=1e-30,
+           weight_decay=0.0, clip_threshold=1.0):
+    step = state["step"] + 1
+
+    def upd(g, m, vr, vc, p):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + eps
+        if _factored(p.shape):
+            vr32 = decay * vr + (1 - decay) * g2.mean(axis=-1)
+            vc32 = decay * vc + (1 - decay) * g2.mean(axis=-2)
+            rfac = jax.lax.rsqrt(
+                vr32 / jnp.maximum(vr32.mean(axis=-1, keepdims=True), eps))
+            cfac = jax.lax.rsqrt(vc32)
+            u = g32 * rfac[..., None] * cfac[..., None, :]
+        else:
+            vr32 = decay * vr + (1 - decay) * g2
+            vc32 = vc
+            u = g32 * jax.lax.rsqrt(vr32)
+        # update clipping (RMS of update <= threshold)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * u
+        newp = p.astype(jnp.float32) - lr * (
+            m32 + weight_decay * p.astype(jnp.float32))
+        return newp.astype(p.dtype), m32.astype(m.dtype), vr32, vc32
+
+    out = jax.tree.map(upd, grads, state["m"], state["vr"], state["vc"], params)
+    pick = lambda i: jax.tree.map(lambda o: o[i], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), {"m": pick(1), "vr": pick(2), "vc": pick(3), "step": step}
+
+
+def state_specs(param_specs, state_dtype="bfloat16"):
+    from repro.models.spec import ParamSpec
+
+    def mom(s):
+        return ParamSpec(s.shape, s.axes, "zeros", dtype=state_dtype)
+
+    def vrow(s):
+        if _factored(s.shape):
+            return ParamSpec(s.shape[:-1], s.axes[:-1], "zeros", dtype="float32")
+        return ParamSpec(s.shape, s.axes, "zeros", dtype="float32")
+
+    def vcol(s):
+        if _factored(s.shape):
+            return ParamSpec(s.shape[:-2] + s.shape[-1:],
+                             s.axes[:-2] + s.axes[-1:], "zeros", dtype="float32")
+        return ParamSpec((0,), (None,), "zeros", dtype="float32")
+
+    is_spec = lambda x: isinstance(x, ParamSpec)
+    return {"m": jax.tree.map(mom, param_specs, is_leaf=is_spec),
+            "vr": jax.tree.map(vrow, param_specs, is_leaf=is_spec),
+            "vc": jax.tree.map(vcol, param_specs, is_leaf=is_spec),
+            "step": ParamSpec((), (), "zeros", dtype="int32")}

@@ -1,0 +1,26 @@
+"""LR schedules + gradient utilities."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr, warmup_steps, total_steps, floor=0.1):
+    t = step.astype(jnp.float32)
+    warm = t / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip((t - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+                    0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return peak_lr * jnp.where(t < warmup_steps, warm, cos)
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        tree), norm

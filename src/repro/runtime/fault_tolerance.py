@@ -1,0 +1,126 @@
+"""Fault tolerance: checkpoint/restart loop, straggler watch, elasticity.
+
+Designed for 1000+ node fleets where *something* is always failing:
+
+  * ``resilient_train``: the train loop is a pure function of
+    (state, step) -> state; any exception (device loss, preemption, numeric
+    blowup configured as fatal) rolls back to the last committed checkpoint
+    and replays — correct because the data pipeline is (seed, step)-pure.
+  * ``StragglerWatch``: per-step deadline from a running p50; breaches are
+    counted and surfaced so the scheduler can evict the slow host (on-fleet
+    action; here it raises after `max_breaches` to trigger the restart path,
+    which on a real cluster lands on a fresh machine set).
+  * ``elastic_remesh``: rebuilds the mesh from surviving devices (largest
+    (data, model) grid that still divides the model axes), re-shards the
+    host-resident checkpoint onto it, and re-lowers the step — scale-down
+    without losing the run.
+"""
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+log = logging.getLogger("repro.runtime")
+
+
+@dataclass
+class StragglerWatch:
+    factor: float = 3.0        # deadline = factor * running p50
+    max_breaches: int = 5
+    warmup: int = 3            # ignore compile steps
+    times: list = field(default_factory=list)
+    breaches: int = 0
+
+    def observe(self, dt: float):
+        self.times.append(dt)
+        hist = self.times[self.warmup:]
+        if len(hist) < 5:
+            return
+        p50 = float(np.median(hist))
+        if dt > self.factor * p50:
+            self.breaches += 1
+            log.warning("straggler: step took %.3fs vs p50 %.3fs (%d/%d)",
+                        dt, p50, self.breaches, self.max_breaches)
+            if self.breaches >= self.max_breaches:
+                raise RuntimeError(
+                    "persistent straggler detected — requesting reschedule")
+
+
+class TransientFailure(Exception):
+    """Raised by hardware/injection to exercise the restart path."""
+
+
+def resilient_train(*, state, train_step, pipeline, ckpt, total_steps,
+                    start_step=0, ckpt_every=50, max_failures=3,
+                    straggler: StragglerWatch | None = None,
+                    fail_injector=None, mesh=None, rules=None,
+                    on_metrics=None):
+    """Run to `total_steps` surviving up to `max_failures` restarts.
+
+    Returns (state, step, n_restarts). `fail_injector(step)` may raise to
+    simulate faults (used by the tests).
+    """
+    step = start_step
+    failures = 0
+    while step < total_steps:
+        try:
+            while step < total_steps:
+                if fail_injector is not None:
+                    fail_injector(step)
+                t0 = time.perf_counter()
+                batch = pipeline.batch(step, mesh=mesh, rules=rules)
+                state, metrics = train_step(state, batch)
+                jax.block_until_ready(metrics)
+                dt = time.perf_counter() - t0
+                if straggler is not None:
+                    straggler.observe(dt)
+                if on_metrics is not None:
+                    on_metrics(step, metrics, dt)
+                step += 1
+                if step % ckpt_every == 0 or step == total_steps:
+                    ckpt.save(step, state)
+        except (TransientFailure, RuntimeError) as e:  # noqa: PERF203
+            failures += 1
+            log.warning("step %d failed (%s); restart %d/%d",
+                        step, e, failures, max_failures)
+            if failures > max_failures:
+                raise
+            ckpt.wait()
+            restored_step, host_state = ckpt.restore()
+            if host_state is None:
+                step = start_step  # no checkpoint yet: replay from the top
+                continue
+            state = _device_put_like(host_state, state)
+            step = restored_step
+    ckpt.wait()
+    return state, step, failures
+
+
+def _device_put_like(host_tree, like_tree):
+    """Restore host arrays onto the shardings of the live state."""
+    return jax.tree.map(
+        lambda h, l: jax.device_put(np.asarray(h).astype(l.dtype),
+                                    l.sharding),
+        host_tree, like_tree)
+
+
+def elastic_remesh(n_devices: int, model_dims: list[int], *, devices=None):
+    """Largest (data, model) mesh on `n_devices` whose model axis divides
+    every dim in `model_dims` (vocab/heads/d_ff...). Scale-down re-mesh."""
+    devices = devices if devices is not None else jax.devices()[:n_devices]
+    n = len(devices)
+    best = (n, 1)
+    for model in range(min(n, 64), 0, -1):
+        if n % model:
+            continue
+        if all(d % model == 0 for d in model_dims):
+            best = (n // model, model)
+            break
+    mesh_devices = np.array(devices[: best[0] * best[1]]).reshape(best)
+    from jax.sharding import Mesh
+
+    return Mesh(mesh_devices, ("data", "model"))

@@ -1,0 +1,8 @@
+from repro.sharding.rules import (  # noqa: F401
+    DEFAULT_RULES,
+    Rules,
+    logical_sharding,
+    logical_spec,
+    rules_for,
+    with_logical_constraint,
+)

@@ -1,0 +1,143 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Every tensor in the framework is annotated with *logical* axis names
+(``('batch','seq','embed')`` …). A rule table maps logical names to mesh
+axes; ``logical_spec`` resolves them to a ``PartitionSpec``, dropping any
+mesh axis that does not evenly divide the concrete dimension (e.g. 8 KV
+heads on a 16-way model axis fall back to replication, Megatron-style).
+
+Mesh axes:
+  pod    — across TPU pods (DCN / optical): pure data parallelism
+  data   — within-pod data parallel + FSDP parameter sharding
+  model  — tensor / expert / sequence parallelism
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axes (tuple = try in order, first divisible wins;
+# list-of-axes value means shard jointly over those mesh axes)
+Rules = dict[str, tuple]
+
+DEFAULT_RULES: Rules = {
+    # --- activations ---
+    "batch": (("pod", "data"),),          # joint shard over pod+data
+    "seq": (None,),                        # replicated by default
+    "seq_shard": ("model",),              # sequence parallelism opt-in
+    "kv_seq": ("model",),                 # KV-cache length (split-KV decode)
+    "embed": (None,),
+    "heads_act": ("model",),              # activation head dim
+    "vocab_act": ("model",),
+    "experts_act": ("model",),
+    "seq_group": ("model",),              # MoE dispatch groups (seq shards)
+    # --- parameters ---
+    "vocab": ("model",),
+    "embed_fsdp": ("data",),              # FSDP: weight's embed dim over data
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "d_ff": ("model",),
+    "experts": ("model",),
+    "moe_ff": (None,),
+    "kv_lora": (None,),
+    "q_lora": (None,),
+    "conv_k": (None,),
+    "ssm_inner": ("model",),
+    "ssm_heads": ("model",),
+    "ssm_state": (None,),
+    "ssm_groups": (None,),
+    "layer": (None,),                      # stacked-scan leading dim
+    None: (None,),
+}
+
+
+def rules_for(cfg, mesh: Mesh) -> Rules:
+    """Per-config rule table: param-sharding policy + mesh-aware tweaks."""
+    rules = dict(DEFAULT_RULES)
+    if cfg.param_sharding == "tp":
+        rules["embed_fsdp"] = (None,)
+    elif cfg.param_sharding == "replicated":
+        for k in ("embed_fsdp", "vocab", "heads", "kv_heads", "d_ff",
+                  "experts", "ssm_inner", "ssm_heads"):
+            rules[k] = (None,)
+    if "pod" not in mesh.axis_names:
+        rules["batch"] = (("data",),)
+    # sequence parallelism on residuals/logits: default ON for the big
+    # train/prefill shapes (decode S=1 is indivisible -> auto-replicated)
+    if bool(cfg.extra.get("sequence_parallel", True)):
+        rules["seq"] = ("model",)
+    return rules
+
+
+def _resolve(axis_name, dim: int, rules: Rules, mesh: Mesh):
+    """Logical axis -> mesh axis (or None), honoring divisibility."""
+    for cand in rules.get(axis_name, (None,)):
+        if cand is None:
+            return None
+        axes = cand if isinstance(cand, tuple) else (cand,)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        if not axes:
+            continue
+        total = 1
+        for a in axes:
+            total *= mesh.shape[a]
+        if dim % total == 0 and dim > 0:
+            return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def logical_spec(logical_axes, shape, rules: Rules, mesh: Mesh) -> P:
+    """PartitionSpec for a tensor with the given logical axes + shape."""
+    assert len(logical_axes) == len(shape), (logical_axes, shape)
+    used: set[str] = set()
+    out = []
+    for ax, dim in zip(logical_axes, shape):
+        res = _resolve(ax, dim, rules, mesh)
+        flat = res if isinstance(res, tuple) else (res,)
+        if res is not None and any(a in used for a in flat):
+            res = None  # a mesh axis may appear once per spec
+        if res is not None:
+            used.update(flat)
+        out.append(res)
+    return P(*out)
+
+
+def logical_sharding(logical_axes, shape, rules: Rules, mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, logical_spec(logical_axes, shape, rules, mesh))
+
+
+def with_logical_constraint(x, logical_axes, rules: Rules | None, mesh: Mesh | None):
+    """Annotate intermediate activations; no-op outside a mesh context."""
+    if rules is None or mesh is None or mesh.empty:
+        return x
+    spec = logical_spec(logical_axes, x.shape, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ----------------------------------------------------------------------
+# trace-time context: lets deeply nested layer code add constraints
+# without threading (rules, mesh) through every signature.
+
+import contextlib
+import threading
+
+_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Rules | None, mesh: Mesh | None):
+    prev = getattr(_CTX, "val", None)
+    _CTX.val = (rules, mesh) if rules is not None and mesh is not None else None
+    try:
+        yield
+    finally:
+        _CTX.val = prev
+
+
+def constrain(x, logical_axes):
+    """Sharding-constrain `x` under the ambient axis_rules context."""
+    ctx = getattr(_CTX, "val", None)
+    if ctx is None:
+        return x
+    rules, mesh = ctx
+    return with_logical_constraint(x, logical_axes, rules, mesh)

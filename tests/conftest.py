@@ -1,0 +1,9 @@
+import os
+import sys
+from pathlib import Path
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device;
+# only launch/dryrun.py forces the 512-placeholder-device topology.
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

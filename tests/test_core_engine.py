@@ -1,0 +1,103 @@
+"""Core engine tests: autotuner, conv2d dispatch, single-image inference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get, tiny_variant
+from repro.core import ConvSpec, InferenceEngine, conv2d, select
+from repro.core.autotune import cost_model_select, measured_select
+from repro.kernels import ref
+
+KEY = jax.random.key(0)
+
+
+def test_autotuner_picks_ilpm_on_paper_layers():
+    """The cost model must reach the paper's conclusion on its own eval
+    layers: ILP-M wins on bandwidth-limited single-image inference."""
+    for h, c in [(56, 64), (28, 128), (14, 256)]:
+        ch = select(ConvSpec(h=h, w=h, c=c, k=c))
+        assert ch.algorithm == "ilpm", (h, c, ch)
+
+
+def test_autotuner_feasibility_vmem():
+    for h, c in [(56, 64), (7, 512)]:
+        ch = cost_model_select(ConvSpec(h=h, w=h, c=c, k=c))
+        assert ch.vmem <= 16 * 2 ** 20
+
+
+def test_measured_select_runs():
+    spec = ConvSpec(h=8, w=8, c=8, k=8)
+    x = jax.random.normal(KEY, (1, 10, 10, 8))
+    w = jax.random.normal(KEY, (3, 3, 8, 8))
+    ch = measured_select(spec, x, w, repeats=1)
+    assert ch.algorithm in ("ilpm", "direct", "im2col", "libdnn", "winograd")
+
+
+@pytest.mark.parametrize("algorithm",
+                         ["auto", "xla", "ilpm", "direct", "winograd"])
+def test_conv2d_dispatch(algorithm):
+    x = jax.random.normal(KEY, (1, 12, 12, 8))
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (3, 3, 8, 16))
+    y = conv2d(x, w, algorithm=algorithm)
+    gt = ref.conv2d_reference(x, w)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(gt), rtol=2e-4,
+                               atol=1e-3)
+
+
+def test_conv2d_patch_embed_path():
+    """Stride-p VALID pxp conv == non-overlapping ILP-M degenerate case."""
+    x = jax.random.normal(KEY, (1, 28, 28, 3))
+    w = jax.random.normal(jax.random.fold_in(KEY, 2), (14, 14, 3, 32))
+    y = conv2d(x, w, stride=14, padding="VALID", algorithm="ilpm")
+    gt = ref.conv2d_reference(x, w, stride=14, padding="VALID")
+    assert y.shape == (1, 2, 2, 32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(gt), rtol=2e-4,
+                               atol=1e-3)
+
+
+def test_inference_engine_single_image():
+    cfg = tiny_variant(get("resnet18"))
+    eng = InferenceEngine(cfg)
+    img = jax.random.normal(KEY, (32, 32, 3))
+    logits = eng.run(img)
+    assert logits.shape == (cfg.vocab_size,)
+    assert not bool(jnp.isnan(logits).any())
+    reports = eng.traffic_report()
+    assert len(reports) == 4 and all(r.est_bytes > 0 for r in reports)
+
+
+def test_engine_algorithms_agree():
+    cfg = tiny_variant(get("resnet18"))
+    img = jax.random.normal(KEY, (32, 32, 3))
+    params = InferenceEngine(cfg).params
+    outs = {}
+    for algo in ("xla", "ilpm", "direct"):
+        eng = InferenceEngine(cfg, params=params, algorithm=algo)
+        outs[algo] = np.asarray(eng.run(img))
+    np.testing.assert_allclose(outs["ilpm"], outs["xla"], rtol=1e-3,
+                               atol=1e-3)
+    np.testing.assert_allclose(outs["direct"], outs["xla"], rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_vit_patch_embed_frontend():
+    from repro.models import frontends
+    from repro.models.spec import init_params
+
+    cfg = tiny_variant(get("internvl2-26b"))
+    p = init_params(frontends.vit_patch_specs(cfg, patch=7), 0, "float32")
+    img = jax.random.normal(KEY, (1, 28, 28, 3))
+    y = frontends.vit_patch_embed(p, cfg, img, patch=7)
+    assert y.shape == (1, 16, cfg.d_model)
+
+
+def test_audio_stem_frontend():
+    from repro.models import frontends
+    from repro.models.spec import init_params
+
+    cfg = tiny_variant(get("whisper-base"))
+    p = init_params(frontends.audio_stem_specs(cfg, n_mels=16), 0, "float32")
+    mel = jax.random.normal(KEY, (1, 32, 16))
+    y = frontends.audio_stem(p, cfg, mel)
+    assert y.shape == (1, 16, cfg.d_model)  # stride-2 downsample

@@ -1,0 +1,224 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.key(42)
+FAST = dict(max_examples=12, deadline=None, derandomize=True)
+
+
+def _conv_case(draw_h, draw_w, draw_c, draw_k, seed):
+    x = jax.random.normal(jax.random.fold_in(KEY, seed),
+                          (1, draw_h, draw_w, draw_c))
+    w = jax.random.normal(jax.random.fold_in(KEY, seed + 1),
+                          (3, 3, draw_c, draw_k))
+    return x, w
+
+
+@settings(**FAST)
+@given(h=st.integers(4, 12), w=st.integers(4, 12), c=st.integers(1, 16),
+       k=st.integers(1, 16), seed=st.integers(0, 100))
+def test_conv_linearity(h, w, c, k, seed):
+    """conv(a·x1 + x2) == a·conv(x1) + conv(x2) — ILP-M is linear."""
+    x1, wgt = _conv_case(h, w, c, k, seed)
+    x2 = jax.random.normal(jax.random.fold_in(KEY, seed + 2), x1.shape)
+    a = 1.7
+    lhs = ref.ilpm_conv(ref.pad_same(a * x1 + x2, 3, 3), wgt)
+    rhs = a * ref.ilpm_conv(ref.pad_same(x1, 3, 3), wgt) \
+        + ref.ilpm_conv(ref.pad_same(x2, 3, 3), wgt)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-3,
+                               atol=1e-3)
+
+
+@settings(**FAST)
+@given(h=st.integers(6, 12), w=st.integers(6, 12), c=st.integers(1, 8),
+       k=st.integers(1, 8), seed=st.integers(0, 100))
+def test_conv_translation_equivariance(h, w, c, k, seed):
+    """Shifting the (VALID-conv) input shifts the output."""
+    x, wgt = _conv_case(h, w, c, k, seed)
+    y = ref.ilpm_conv(x, wgt)                      # VALID: x is 'pre-padded'
+    xs = jnp.roll(x, 1, axis=2)
+    ys = ref.ilpm_conv(xs, wgt)
+    np.testing.assert_allclose(np.asarray(y[:, :, : w - 3]),
+                               np.asarray(ys[:, :, 1: w - 2]), rtol=1e-3,
+                               atol=1e-3)
+
+
+@settings(**FAST)
+@given(h=st.sampled_from([6, 8, 10]), w=st.sampled_from([6, 8, 10]),
+       c=st.integers(1, 12), k=st.integers(1, 12), seed=st.integers(0, 50))
+def test_all_algorithms_agree(h, w, c, k, seed):
+    """The five algorithms compute the same convolution (paper's premise)."""
+    x, wgt = _conv_case(h, w, c, k, seed)
+    xp = ref.pad_same(x, 3, 3)
+    ys = {name: np.asarray(fn(xp, wgt, impl="jnp"))
+          for name, fn in ops.ALGORITHMS.items()}
+    base = ys.pop("ilpm")
+    scale = max(float(np.abs(base).max()), 1e-3)
+    for name, y in ys.items():
+        np.testing.assert_allclose(y, base, rtol=2e-3, atol=2e-4 * scale,
+                                    err_msg=name)
+
+
+@settings(**FAST)
+@given(sq=st.sampled_from([4, 16, 33]), sk=st.sampled_from([8, 64, 130]),
+       h=st.sampled_from([1, 2, 4]), seed=st.integers(0, 50),
+       chunk=st.sampled_from([8, 16, 64]))
+def test_attention_chunked_equals_full(sq, sk, h, seed, chunk):
+    """Online-softmax chunking is exact (any chunk size)."""
+    from repro.models.layers import _attend_chunked, _attend_full
+
+    kk = jax.random.fold_in(KEY, seed)
+    q = jax.random.normal(kk, (2, sq, h, 8))
+    k = jax.random.normal(jax.random.fold_in(kk, 1), (2, sk, h, 8))
+    v = jax.random.normal(jax.random.fold_in(kk, 2), (2, sk, h, 8))
+    # every query must see >= 1 key (fully-masked rows are out of contract)
+    qp = jnp.broadcast_to(jnp.arange(sq) + max(sk - sq, 0), (2, sq))
+    kp = jnp.broadcast_to(jnp.arange(sk), (2, sk))
+    full = _attend_full(q, k, v, causal=True, q_pos=qp, kv_pos=kp, scale=0.35)
+    ck = _attend_chunked(q, k, v, causal=True, q_pos=qp, kv_pos=kp,
+                         scale=0.35, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(ck), np.asarray(full), rtol=2e-5,
+                               atol=2e-5)
+
+
+@settings(**FAST)
+@given(l=st.sampled_from([32, 48, 96]), chunk=st.sampled_from([8, 16, 32]),
+       seed=st.integers(0, 50))
+def test_ssd_chunk_invariance(l, chunk, seed):
+    """SSD output must not depend on the chunk size (algorithm invariant)."""
+    from repro.models.ssm import ssd_chunked
+
+    kk = jax.random.fold_in(KEY, seed)
+    B, G, Hg, P, N = 1, 1, 2, 4, 8
+    x = jax.random.normal(kk, (B, l, G, Hg, P))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(kk, 1),
+                                           (B, l, G, Hg)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(kk, 2), (G, Hg)) * 0.3)
+    Bm = jax.random.normal(jax.random.fold_in(kk, 3), (B, l, G, N))
+    C = jax.random.normal(jax.random.fold_in(kk, 4), (B, l, G, N))
+    y1, s1 = ssd_chunked(x, dt, A, Bm, C, chunk)
+    y2, s2 = ssd_chunked(x, dt, A, Bm, C, l)  # single chunk
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-3,
+                               atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_ssd_equals_naive_recurrence():
+    """Chunked SSD == step-by-step recurrent scan (duality check)."""
+    from repro.models.ssm import ssd_chunked
+
+    kk = jax.random.fold_in(KEY, 9)
+    B, L, G, Hg, P, N = 1, 24, 1, 2, 3, 4
+    x = jax.random.normal(kk, (B, L, G, Hg, P))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(kk, 1),
+                                           (B, L, G, Hg)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(kk, 2), (G, Hg)) * 0.3)
+    Bm = jax.random.normal(jax.random.fold_in(kk, 3), (B, L, G, N))
+    C = jax.random.normal(jax.random.fold_in(kk, 4), (B, L, G, N))
+    y, s_final = ssd_chunked(x, dt, A, Bm, C, 8)
+    # naive recurrence
+    s = np.zeros((B, G, Hg, P, N))
+    ys = []
+    for t in range(L):
+        dA = np.exp(np.asarray(dt[:, t] * A))            # (B,G,Hg)
+        upd = np.einsum("bgh,bgn,bghp->bghpn", np.asarray(dt[:, t]),
+                        np.asarray(Bm[:, t]), np.asarray(x[:, t]))
+        s = s * dA[..., None, None] + upd
+        ys.append(np.einsum("bgn,bghpn->bghp", np.asarray(C[:, t]), s))
+    np.testing.assert_allclose(np.asarray(y), np.stack(ys, 1), rtol=2e-3,
+                               atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s_final), s, rtol=2e-3, atol=2e-3)
+
+
+@settings(**FAST)
+@given(b=st.sampled_from([1, 2]), s=st.sampled_from([8, 16]),
+       seed=st.integers(0, 30), cf=st.sampled_from([4.0, 8.0]))
+def test_moe_sorted_equals_dense(b, s, seed, cf):
+    """Sort-based dispatch == dense GShard dispatch at high capacity."""
+    from repro.configs import get, tiny_variant
+    from repro.models import layers as L
+    from repro.models.spec import init_params
+
+    cfg = tiny_variant(get("granite-moe-3b-a800m")).replace(
+        capacity_factor=cf, num_shared_experts=0)
+    p = init_params(L.moe_specs(cfg), seed, "float32")
+    x = jax.random.normal(jax.random.fold_in(KEY, seed),
+                          (b, s, cfg.d_model)) * 0.3
+    y_dense, _ = L.moe(p, cfg.replace(moe_dispatch="dense"), x)
+    logits = jnp.einsum("bse,ef->bsf", x, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    gate, idx = jax.lax.top_k(probs, cfg.top_k)
+    gate = gate / gate.sum(-1, keepdims=True)
+    y_sorted = L._moe_scatter_dispatch(p, cfg, x, idx, gate, None)
+    np.testing.assert_allclose(np.asarray(y_dense), np.asarray(y_sorted),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(**FAST)
+@given(seed=st.integers(0, 100))
+def test_rope_preserves_norm(seed):
+    """Rotary embedding is a rotation: vector norms are invariant."""
+    from repro.models.layers import rope
+
+    x = jax.random.normal(jax.random.fold_in(KEY, seed), (2, 6, 4, 16))
+    pos = jnp.broadcast_to(jnp.arange(6), (2, 6))
+    y = rope(x, pos, 10000.0)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-4)
+
+
+@settings(**FAST)
+@given(seed=st.integers(0, 100))
+def test_rope_relative_property(seed):
+    """<rope(q,m), rope(k,n)> depends only on (m - n)."""
+    from repro.models.layers import rope
+
+    q = jax.random.normal(jax.random.fold_in(KEY, seed), (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.fold_in(KEY, seed + 1), (1, 1, 1, 16))
+    def dot_at(m, n):
+        qm = rope(q, jnp.full((1, 1), m), 10000.0)
+        kn = rope(k, jnp.full((1, 1), n), 10000.0)
+        return float(jnp.sum(qm * kn))
+    assert abs(dot_at(5, 3) - dot_at(9, 7)) < 1e-3
+    assert abs(dot_at(4, 0) - dot_at(14, 10)) < 1e-3
+
+
+@settings(**FAST)
+@given(seed=st.integers(0, 100), shape=st.sampled_from([(8,), (4, 6), (3, 5, 7)]))
+def test_compression_error_feedback_bound(seed, shape):
+    """int8 EF quantization: residual bounded by scale/2; codes in range."""
+    from repro.optim.compression import ef_compress, dequantize
+
+    g = jax.random.normal(jax.random.fold_in(KEY, seed), shape) * 3.0
+    err = jnp.zeros(shape)
+    codes, scale, new_err = ef_compress(g, err)
+    assert int(jnp.abs(codes).max()) <= 127
+    np.testing.assert_allclose(
+        np.asarray(dequantize(codes, scale) + new_err), np.asarray(g),
+        rtol=1e-5, atol=1e-5)
+    assert float(jnp.abs(new_err).max()) <= float(scale) * 0.5 + 1e-6
+
+
+@settings(**FAST)
+@given(seed=st.integers(0, 50))
+def test_ce_loss_matches_log_softmax(seed):
+    """The sharded-vocab-safe CE equals the textbook formula."""
+    from repro.launch.steps import _ce_loss
+
+    kk = jax.random.fold_in(KEY, seed)
+    logits = jax.random.normal(kk, (2, 5, 17)) * 3
+    labels = jax.random.randint(jax.random.fold_in(kk, 1), (2, 5), 0, 17)
+    labels = labels.at[0, 0].set(-100)  # ignore index
+    want_ll = jax.nn.log_softmax(logits, -1)
+    mask = labels >= 0
+    want = -(jnp.take_along_axis(want_ll, jnp.maximum(labels, 0)[..., None],
+                                 axis=-1)[..., 0] * mask).sum() / mask.sum()
+    got = _ce_loss(logits, labels)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)

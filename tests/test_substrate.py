@@ -1,0 +1,208 @@
+"""Substrate tests: optimizer, schedules, data determinism, checkpointing,
+fault tolerance, elastic re-mesh, gradient compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.data import TokenPipeline
+from repro.optim import adafactor, adamw, schedule
+from repro.runtime import (StragglerWatch, TransientFailure, elastic_remesh,
+                           resilient_train)
+
+
+# ---------------------------------------------------------------- optim
+
+def _quadratic_problem():
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    def grads_of(p):
+        return {"w": 2 * (p["w"] - target)}
+    return params, grads_of, target
+
+
+def test_adamw_converges():
+    params, grads_of, target = _quadratic_problem()
+    state = adamw.init(params)
+    for _ in range(300):
+        params, state = adamw.update(grads_of(params), state, params,
+                                     lr=0.05, weight_decay=0.0)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_adamw_bf16_states():
+    params = {"w": jnp.ones((4, 4))}
+    state = adamw.init(params, state_dtype="bfloat16")
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    newp, state = adamw.update({"w": jnp.ones((4, 4))}, state, params, lr=0.1)
+    assert newp["w"].dtype == params["w"].dtype
+
+
+def test_adafactor_converges_and_factors():
+    params = {"w": jnp.zeros((8, 6)), "b": jnp.zeros(6)}
+    target = jax.random.normal(jax.random.key(0), (8, 6))
+    state = adafactor.init(params)
+    assert state["vr"]["w"].shape == (8,)      # factored row stats
+    assert state["vc"]["w"].shape == (6,)
+    for _ in range(400):
+        g = {"w": 2 * (params["w"] - target), "b": params["b"] * 0}
+        params, state = adafactor.update(g, state, params, lr=0.05)
+    assert float(jnp.abs(params["w"] - target).mean()) < 0.1
+
+
+def test_optimizer_state_specs_match_params():
+    from repro.configs import get, tiny_variant
+    from repro.launch.steps import init_state, state_specs
+
+    cfg = tiny_variant(get("granite-8b"))
+    st = init_state(cfg, 0)
+    specs = state_specs(cfg)
+    flat_s = jax.tree.leaves(specs)
+    flat_v = jax.tree.leaves(st)
+    assert len(flat_s) == len(flat_v)
+
+
+def test_schedule_shapes():
+    s0 = schedule.warmup_cosine(jnp.asarray(0), peak_lr=1e-3,
+                                warmup_steps=10, total_steps=100)
+    s10 = schedule.warmup_cosine(jnp.asarray(10), peak_lr=1e-3,
+                                 warmup_steps=10, total_steps=100)
+    s100 = schedule.warmup_cosine(jnp.asarray(100), peak_lr=1e-3,
+                                  warmup_steps=10, total_steps=100)
+    assert float(s0) == 0.0
+    assert abs(float(s10) - 1e-3) < 1e-9
+    assert float(s100) < 2e-4
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones(4) * 100.0}
+    clipped, norm = schedule.clip_by_global_norm(g, 1.0)
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
+    assert float(norm) == pytest.approx(200.0)
+
+
+# ----------------------------------------------------------------- data
+
+def test_pipeline_deterministic_skip_ahead():
+    p1 = TokenPipeline(1000, 16, 4, seed=7)
+    p2 = TokenPipeline(1000, 16, 4, seed=7)
+    # restart at step 5 must regenerate the same batch with no state replay
+    b1 = p1.batch(5)
+    for _ in range(3):
+        p2.batch(0)  # unrelated reads do not perturb determinism
+    b2 = p2.batch(5)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    assert not np.array_equal(np.asarray(p1.batch(6)["tokens"]),
+                              np.asarray(b1["tokens"]))
+
+
+def test_pipeline_labels_shifted():
+    p = TokenPipeline(50, 8, 2, seed=1)
+    b = p.batch(0)
+    assert b["tokens"].shape == (2, 8) and b["labels"].shape == (2, 8)
+
+
+# ----------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2, async_save=False)
+    tree = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+            "opt": {"step": jnp.asarray(3)}}
+    mgr.save(10, tree)
+    mgr.save(20, tree)
+    mgr.save(30, tree)
+    assert mgr.all_steps() == [20, 30]  # keep=2 garbage collection
+    step, restored = mgr.restore()
+    assert step == 30
+    np.testing.assert_array_equal(restored["params"]["w"],
+                                  np.arange(6.0).reshape(2, 3))
+
+
+def test_checkpoint_integrity_detection(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    mgr.save(1, {"w": jnp.ones(4)})
+    shard = next((tmp_path / "step_1").glob("shard_*.npz"))
+    shard.write_bytes(shard.read_bytes()[:-7] + b"corrupt")
+    with pytest.raises(IOError):
+        mgr.restore(1)
+
+
+def test_checkpoint_torn_write_ignored(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    mgr.save(1, {"w": jnp.ones(2)})
+    torn = tmp_path / "step_2"
+    torn.mkdir()
+    (torn / "shard_0.npz").write_bytes(b"partial")  # no COMMIT marker
+    assert mgr.latest_step() == 1
+
+
+# ------------------------------------------------------ fault tolerance
+
+def _toy_train_setup(tmp_path):
+    params = {"w": jnp.zeros(4)}
+
+    def train_step(state, batch):
+        g = state["w"] - batch["tokens"].astype(jnp.float32).mean()
+        new = {"w": state["w"] - 0.1 * g}
+        return new, {"loss": jnp.sum(g * g)}
+
+    pipe = TokenPipeline(100, 4, 2, seed=3)
+    ckpt = CheckpointManager(tmp_path, async_save=False)
+    return params, train_step, pipe, ckpt
+
+
+def test_resilient_train_survives_failures(tmp_path):
+    params, train_step, pipe, ckpt = _toy_train_setup(tmp_path)
+    boom = {20: True, 35: True}
+
+    def injector(step):
+        if boom.pop(step, None):
+            raise TransientFailure(f"injected at {step}")
+
+    state, step, failures = resilient_train(
+        state=params, train_step=train_step, pipeline=pipe, ckpt=ckpt,
+        total_steps=50, ckpt_every=10, max_failures=5, fail_injector=injector)
+    assert step == 50 and failures == 2
+
+
+def test_resilient_train_replays_identically(tmp_path):
+    """Crash-and-restore must produce the same final state as no-crash."""
+    params, train_step, pipe, ckpt = _toy_train_setup(tmp_path / "a")
+    state_ref, _, _ = resilient_train(
+        state=params, train_step=train_step, pipeline=pipe, ckpt=ckpt,
+        total_steps=30, ckpt_every=5, max_failures=0)
+
+    params, train_step, pipe, ckpt = _toy_train_setup(tmp_path / "b")
+    hits = {17: True}
+
+    def injector(step):
+        if hits.pop(step, None):
+            raise TransientFailure("boom")
+
+    state_ft, _, fails = resilient_train(
+        state=params, train_step=train_step, pipeline=pipe, ckpt=ckpt,
+        total_steps=30, ckpt_every=5, max_failures=2, fail_injector=injector)
+    assert fails == 1
+    np.testing.assert_allclose(np.asarray(state_ft["w"]),
+                               np.asarray(state_ref["w"]), rtol=1e-6)
+
+
+def test_straggler_watch_raises():
+    w = StragglerWatch(factor=2.0, max_breaches=2, warmup=0)
+    for _ in range(6):
+        w.observe(0.1)
+    w.observe(0.5)
+    with pytest.raises(RuntimeError):
+        w.observe(0.5)
+
+
+def test_elastic_remesh_divisibility():
+    mesh = elastic_remesh(1, model_dims=[4096, 32, 14336])
+    assert mesh.shape["data"] * mesh.shape["model"] == 1
+    # degenerate single-device case still builds a named mesh
+    assert set(mesh.axis_names) == {"data", "model"}
