@@ -1,0 +1,15 @@
+# Tier-1 verification: the command CI and the roadmap gate on.
+PYTHON ?= python
+
+.PHONY: verify
+verify:
+	PYTHONPATH=src $(PYTHON) -m pytest -x -q
+
+.PHONY: examples
+examples:
+	PYTHONPATH=src $(PYTHON) examples/quickstart.py
+	PYTHONPATH=src $(PYTHON) examples/mobile_pipeline.py
+
+.PHONY: bench
+bench:
+	PYTHONPATH=src:. $(PYTHON) benchmarks/conv_algorithms.py

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 from benchmarks.devices import DEVICES
 from repro.configs.resnet import PAPER_CONV_LAYERS
-from repro.core.autotune import _candidates
+from repro.core.autotune import _candidates, build_plan, cost_model_select
 from repro.core.convspec import ConvSpec
 
 # instruction-overhead multipliers on the compute term, from the paper's
@@ -50,6 +50,11 @@ def run():
                     times[algo] = t
             row = {"device": dev, "layer": layer.name}
             row.update({a: round(t * 1e6, 2) for a, t in times.items()})
+            # what the shipping autotuner (no instruction-overhead term)
+            # would put in this device's TuningPlan for this layer
+            tuned = cost_model_select(spec, peak_flops=peak, hbm_bw=bw)
+            row["tuned"] = tuned.algorithm + "".join(
+                f":{k}={v}" for k, v in tuned.params)
             row["ilpm_vs_im2col"] = round(times["im2col"] / times["ilpm"], 2)
             row["ilpm_vs_direct"] = round(times["direct"] / times["ilpm"], 2)
             if "winograd" in times:
@@ -74,11 +79,18 @@ def headline(rows):
 def main():
     rows = run()
     cols = ["device", "layer", "im2col", "libdnn", "winograd", "direct",
-            "ilpm", "ilpm_vs_im2col", "ilpm_vs_direct"]
+            "ilpm", "tuned", "ilpm_vs_im2col", "ilpm_vs_direct"]
     print(",".join(cols))
     for r in rows:
         print(",".join(str(r.get(c, "")) for c in cols))
     print("#", headline(rows))
+    # the v5e plan the engine would ship for the paper's four layer shapes
+    plan = build_plan(
+        (layer.name,
+         ConvSpec(h=layer.h, w=layer.w, c=layer.c_in, k=layer.c_out))
+        for layer in PAPER_CONV_LAYERS)
+    print("# v5e plan:", {n: c.algorithm + str(dict(c.params))
+                          for n, c in plan.choices.items()})
 
 
 if __name__ == "__main__":

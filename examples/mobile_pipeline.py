@@ -1,13 +1,16 @@
 """Edge-deployment pipeline example (the paper's §2.3 engineering story).
 
 Simulates the deploy workflow for a fixed CNN on a fixed device: (1) tune
-once offline per conv shape with the autotuner (cost-model and measured
-modes), (2) freeze the per-layer algorithm plan, (3) run a stream of single
-images through the jitted engine, (4) report the traffic/energy proxy.
+once offline — the engine enumerates every conv site and the autotuner
+(cost-model or measured mode) picks each site's algorithm + kernel params,
+(2) freeze the per-layer plan to JSON, (3) "ship" the plan: a fresh engine
+loads it without re-tuning and jits a forward with per-layer dispatch,
+(4) run a stream of single images, (5) report the traffic/energy proxy.
 
     PYTHONPATH=src python examples/mobile_pipeline.py
 """
 import sys
+import tempfile
 import time
 from pathlib import Path
 
@@ -26,29 +29,39 @@ def main():
     for h, c in [(8, 64), (4, 128)]:
         spec = ConvSpec(h=h, w=h, c=c, k=c)
         cm = select(spec)
-        x = jax.random.normal(jax.random.key(0), (1, h + 2, h + 2, c))
-        w = jax.random.normal(jax.random.key(1), (3, 3, c, c))
-        ms = measured_select(spec, x, w, repeats=1)
-        print(f"  {h}x{h} C=K={c}: cost-model -> {cm.algorithm}, "
-              f"measured(interpret) -> {ms.algorithm}")
+        ms = measured_select(spec, repeats=1)
+        print(f"  {h}x{h} C=K={c}: cost-model -> {cm.algorithm}"
+              f"{dict(cm.params)}, measured(interpret) -> {ms.algorithm}"
+              f"{dict(ms.params)}")
 
-    print("\n== frozen engine, image stream ==")
-    engine = InferenceEngine(cfg, seed=0)
-    times = []
-    for i in range(5):
-        img = jax.random.normal(jax.random.key(i), (32, 32, 3))
-        t0 = time.perf_counter()
-        engine.run(img).block_until_ready()
-        times.append(time.perf_counter() - t0)
-    print(f"  first call (compile): {times[0] * 1e3:.1f} ms; "
-          f"steady-state: {min(times[1:]) * 1e3:.2f} ms/image")
+    with tempfile.TemporaryDirectory() as td:
+        plan_path = Path(td) / "plan.json"
 
-    print("\n== traffic report (energy proxy — paper §2.2) ==")
-    total = sum(r.est_bytes for r in engine.traffic_report())
-    for r in engine.traffic_report():
-        print(f"  {r.name}: {r.algorithm:8s} {r.est_bytes / 1e6:6.2f} MB/img")
-    print(f"  total conv traffic: {total / 1e6:.2f} MB/image "
-          f"(at full ResNet-18 scale; off-chip bytes ~ battery)")
+        print("\n== freeze the per-layer plan (the shippable artifact) ==")
+        tuner = InferenceEngine(cfg, seed=0)  # algorithm='auto': tunes
+        tuner.save_plan(plan_path)
+        algos = tuner.plan.algorithms()
+        print(f"  {plan_path.name}: {len(algos)} conv sites, "
+              f"algorithms {sorted(set(algos.values()))}")
+
+        print("\n== deployed engine (loads plan, never re-tunes) ==")
+        engine = InferenceEngine(cfg, params=tuner.params, plan=plan_path)
+        times = []
+        for i in range(5):
+            img = jax.random.normal(jax.random.key(i), (32, 32, 3))
+            t0 = time.perf_counter()
+            engine.run(img).block_until_ready()
+            times.append(time.perf_counter() - t0)
+        print(f"  first call (compile): {times[0] * 1e3:.1f} ms; "
+              f"steady-state: {min(times[1:]) * 1e3:.2f} ms/image")
+
+        print("\n== traffic report (energy proxy — paper §2.2) ==")
+        total = sum(r.est_bytes for r in engine.traffic_report())
+        for r in engine.traffic_report():
+            print(f"  {r.name:9s} {r.algorithm:8s} "
+                  f"{r.est_bytes / 1e6:6.2f} MB/img")
+        print(f"  total conv traffic: {total / 1e6:.2f} MB/image "
+              f"(off-chip bytes ~ battery)")
 
 
 if __name__ == "__main__":

@@ -1,12 +1,14 @@
 """Quickstart: the paper's scenario — single-image CNN inference with ILP-M.
 
 Runs a ResNet-18 (reduced for CPU) through the tuned inference engine,
-compares all five convolution algorithms on the same image, and prints the
-autotuner's per-stage choices + traffic report (the paper's energy proxy).
+shows the per-layer tuning plan (each conv site gets its own algorithm and
+kernel parameters), round-trips the plan through JSON (tune once, deploy
+many), and compares all five convolution algorithms on the same image.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import sys
+import tempfile
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
@@ -15,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get, tiny_variant
-from repro.core import InferenceEngine
+from repro.core import InferenceEngine, TuningPlan
 
 
 def main():
@@ -28,12 +30,24 @@ def main():
     print(f"logits: shape={logits.shape}, top-3 classes:",
           jnp.argsort(logits)[-3:][::-1].tolist())
 
-    print("\n== per-stage autotuner decisions ==")
+    print("\n== per-layer tuning plan (traffic report = energy proxy) ==")
     for rep in engine.traffic_report():
-        print(f"  {rep.name}: {rep.algorithm:8s} "
-              f"est {rep.est_time * 1e6:7.1f} us  "
+        params = " ".join(f"{k}={v}" for k, v in rep.params) or "-"
+        print(f"  {rep.name:9s} {rep.spec.h:3d}x{rep.spec.w:<3d} "
+              f"C={rep.spec.c:<3d} K={rep.spec.k:<3d}: {rep.algorithm:8s} "
+              f"{params:12s} est {rep.est_time * 1e6:7.1f} us  "
               f"{rep.est_bytes / 1e6:6.2f} MB  "
               f"{rep.est_flops / 1e6:7.1f} MFLOP")
+
+    print("\n== plan JSON round-trip (tune once, deploy many) ==")
+    with tempfile.TemporaryDirectory() as td:
+        path = Path(td) / "resnet18_plan.json"
+        engine.save_plan(path)
+        deployed = InferenceEngine(cfg, params=engine.params, plan=path)
+        same = bool(jnp.allclose(deployed.run(image), logits))
+        print(f"  saved {path.name} ({path.stat().st_size} bytes), "
+              f"reloaded plan mode={deployed.plan.mode}, "
+              f"logits identical: {same}")
 
     print("\n== all five algorithms, same image (must agree) ==")
     ref = None

@@ -6,6 +6,8 @@ convolution for single-image inference) lives here: the algorithm registry
 the ConvSpec key, and the single-image inference engine.
 """
 from repro.core.algorithms import conv2d  # noqa: F401
-from repro.core.autotune import select, cost_model_select, measured_select  # noqa: F401
+from repro.core.autotune import (  # noqa: F401
+    Choice, TuningPlan, build_plan, cost_model_select, measured_select,
+    select)
 from repro.core.convspec import ConvSpec  # noqa: F401
 from repro.core.engine import InferenceEngine  # noqa: F401

@@ -4,7 +4,10 @@
 contribution: 'ilpm' | 'direct' | 'im2col' | 'libdnn' | 'winograd' run the
 corresponding kernels; 'auto' asks the autotuner; 'xla' is the
 lax.conv_general_dilated escape hatch (used for 1x1/strided convs where the
-paper's algorithms don't apply).
+paper's algorithms don't apply). Passing an explicit autotuner ``choice``
+(a ``repro.core.autotune.Choice``) pins both the algorithm *and* its tuned
+kernel parameters (``block_k``/``block_h``) — this is how a TuningPlan's
+per-layer decisions reach the kernels.
 """
 from __future__ import annotations
 
@@ -16,9 +19,14 @@ from repro.core.convspec import ConvSpec
 from repro.kernels import ops, ref
 
 
-def conv2d(x, w, *, stride=1, padding="SAME", algorithm="auto", impl="auto"):
+def conv2d(x, w, *, stride=1, padding="SAME", algorithm="auto", impl="auto",
+           choice=None):
     """x: (B,H,W,C) NHWC; w: (R,S,C,K) HWIO -> (B,H',W',K)."""
     R, S, C, K = w.shape
+    if choice is not None:
+        algorithm, params = choice.algorithm, dict(choice.params)
+    else:
+        params = {}
     if algorithm == "xla":
         return ref.conv2d_reference(x, w, stride=stride, padding=padding)
 
@@ -37,6 +45,13 @@ def conv2d(x, w, *, stride=1, padding="SAME", algorithm="auto", impl="auto"):
         # stride-1 3x3) — XLA path, noted in DESIGN.md
         return ref.conv2d_reference(x, w, stride=stride, padding=padding)
 
+    if algorithm == "auto":
+        spec = ConvSpec.from_tensors(x, w, stride)
+        tuned = autotune.select(spec)
+        algorithm, params = tuned.algorithm, dict(tuned.params)
+        if algorithm == "xla":  # tuner punted (e.g. 1x1): reference path
+            return ref.conv2d_reference(x, w, stride=stride, padding=padding)
+
     if padding == "SAME":
         xp = ref.pad_same(x, R, S)
     elif padding == "VALID":
@@ -44,16 +59,8 @@ def conv2d(x, w, *, stride=1, padding="SAME", algorithm="auto", impl="auto"):
     else:
         raise ValueError(padding)
 
-    if algorithm == "auto":
-        spec = ConvSpec.from_tensors(x, w, stride)
-        choice = autotune.select(spec)
-        algorithm, params = choice.algorithm, dict(choice.params)
-    else:
-        params = {}
-
     if algorithm == "winograd":
         H, W = xp.shape[1] - R + 1, xp.shape[2] - S + 1
         if (R, S) != (3, 3) or H % 2 or W % 2:
             algorithm = "ilpm"  # winograd F(2,3) inapplicable -> best direct
-    fn = ops.ALGORITHMS[algorithm]
-    return fn(xp, w, impl=impl, **params)
+    return ops.dispatch(algorithm, xp, w, impl=impl, **params)

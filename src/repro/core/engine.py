@@ -1,9 +1,23 @@
 """Single-image CNN inference engine — the paper's deployment scenario.
 
-Wraps a CNN (ResNet here) with: per-layer algorithm tuning (once, offline —
-paper §2.3), a jitted single-image forward, and traffic/FLOP accounting per
-layer for the energy-proxy report (paper §2.2: off-chip traffic dominates
-edge energy).
+Wraps a CNN (ResNet here) with the paper's tune-once/run-many flow (§2.3):
+
+  1. ``_conv_specs`` enumerates the ConvSpec of every *spatial* conv site
+     in the network — the stem, both convs of every basic block, the 3x3
+     of every bottleneck block (at the bottleneck width), and the strided
+     stage-entry convs; 1x1 convs (bottleneck c1/c3, projection shortcuts)
+     are plain matmuls outside the paper's algorithm family and are not
+     planned or counted in the traffic report;
+  2. the autotuner turns that list into a ``TuningPlan`` (cost-model or
+     measured mode) mapping each layer name to its tuned Choice —
+     algorithm plus kernel parameters;
+  3. the plan is threaded into ``resnet.forward`` and jitted, so the
+     compiled forward dispatches each layer to its own tuned kernel;
+  4. plans serialize to JSON (``save_plan`` / ``TuningPlan.load``) so a
+     device tunes once offline and deployments just load the plan.
+
+The per-layer traffic/FLOP report doubles as the energy proxy (paper §2.2:
+off-chip traffic dominates edge energy).
 """
 from __future__ import annotations
 
@@ -14,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import autotune
+from repro.core.autotune import TuningPlan
 from repro.core.convspec import ConvSpec
 from repro.models import resnet
 from repro.models.spec import init_params
@@ -27,55 +42,124 @@ class LayerReport:
     est_time: float
     est_bytes: int
     est_flops: int
+    params: tuple = ()
 
 
 class InferenceEngine:
-    """Tune-once, run-many single-image inference."""
+    """Tune-once, run-many single-image inference.
 
-    def __init__(self, cfg, params=None, seed=0, algorithm="auto"):
+    ``algorithm="auto"`` tunes a per-layer plan (``tune_mode`` picks
+    cost-model vs measured); a concrete algorithm name forces every 3x3
+    conv onto that algorithm; ``plan=`` (a TuningPlan or a JSON path)
+    skips tuning and deploys a saved plan.
+    """
+
+    def __init__(self, cfg, params=None, seed=0, algorithm="auto",
+                 plan=None, tune_mode="cost_model"):
         assert cfg.family == "cnn"
         self.cfg = cfg
         self.params = params if params is not None else init_params(
             resnet.model_specs(cfg), seed, cfg.param_dtype)
         self.algorithm = algorithm
-        self.reports = self._tune() if algorithm == "auto" else []
+        if plan is not None and not isinstance(plan, TuningPlan):
+            plan = TuningPlan.load(plan)  # a path: tune-once/deploy-many
+        if plan is not None:
+            self._validate_plan(plan)
+        elif algorithm == "auto":
+            plan = self.tune(mode=tune_mode)
+        self.plan = plan
+        self.reports = self._reports_from_plan(plan) if plan else []
         self._fwd = jax.jit(functools.partial(
             resnet.forward, cfg=cfg,
-            algorithm=self._tuned_algorithm()))
+            algorithm="auto" if algorithm == "auto" else algorithm,
+            plan=plan.choices if plan is not None else None))
+
+    # ------------------------------------------------------------------
+    # plan construction
 
     def _conv_specs(self):
-        """Every 3x3 conv layer's ConvSpec for the configured input size."""
+        """(name, ConvSpec) per spatial conv site, keyed like the params.
+
+        Walks the exact geometry of ``resnet.forward``: stem (7x7 stride 2)
+        then max-pool (stride 2), then each stage's blocks — the first
+        block of stages 1+ enters with stride 2, and bottleneck stages tune
+        the 3x3 at the bottleneck width (cout // 4).
+        """
         img = self.cfg.extra["img"]
         blocks = self.cfg.extra["blocks"]
+        bottleneck = self.cfg.extra["bottleneck"]
         widths = [64, 128, 256, 512]
-        sizes = [img // 4, img // 8, img // 16, img // 32]
-        specs = []
+        if bottleneck:
+            widths = [w * 4 for w in widths]
+        specs = [("stem", ConvSpec(h=img, w=img, c=3, k=64, r=7, s=7,
+                                   stride=2))]
+        size = img // 4  # stem stride 2, then 3x3/2 max-pool
+        cin = 64
         for si, n in enumerate(blocks):
-            c = widths[si]
-            h = sizes[si]
-            specs.append((f"s{si}", ConvSpec(h=h, w=h, c=c, k=c)))
+            cout = widths[si]
+            for bi in range(n):
+                stride = 2 if (si > 0 and bi == 0) else 1
+                name = f"s{si}b{bi}"
+                if bottleneck:
+                    mid = cout // 4
+                    specs.append((f"{name}.c2", ConvSpec(
+                        h=size, w=size, c=mid, k=mid, stride=stride)))
+                else:
+                    specs.append((f"{name}.c1", ConvSpec(
+                        h=size, w=size, c=cin, k=cout, stride=stride)))
+                    specs.append((f"{name}.c2", ConvSpec(
+                        h=size // stride, w=size // stride, c=cout, k=cout)))
+                size //= stride
+                cin = cout
         return specs
 
-    def _tune(self):
-        out = []
-        for name, spec in self._conv_specs():
-            ch = autotune.select(spec)
-            out.append(LayerReport(name, spec, ch.algorithm, ch.est_time,
-                                   ch.est_bytes, ch.est_flops))
-        return out
+    def tune(self, mode="cost_model", **tune_kwargs) -> TuningPlan:
+        """Build the per-layer TuningPlan (the offline step of §2.3).
 
-    def _tuned_algorithm(self):
-        if self.algorithm != "auto":
-            return self.algorithm
-        # single dominant choice (the tuner picks per-layer; the jitted
-        # forward takes one algorithm arg — per-layer dispatch goes through
-        # algorithms.conv2d('auto') inside the model)
-        return "auto"
+        ``tune_kwargs`` reach the tuner: ``repeats`` and ``noise_floor``
+        for measured mode (on real hardware use ``noise_floor=0`` for
+        pure wall-clock selection).
+        """
+        return autotune.build_plan(self._conv_specs(), mode=mode,
+                                   **tune_kwargs)
+
+    def _validate_plan(self, plan: TuningPlan) -> None:
+        """A deployed plan must match this network's conv geometry."""
+        import logging
+
+        ours = dict(self._conv_specs())
+        mismatched = {n for n, spec in plan.specs.items()
+                      if n in ours and ours[n] != spec}
+        if mismatched:
+            raise ValueError(
+                f"tuning plan was built for a different network/input "
+                f"size; mismatched specs for {sorted(mismatched)}")
+        missing = ours.keys() - plan.specs.keys()
+        extra = plan.specs.keys() - ours.keys()
+        if missing or extra:
+            logging.getLogger(__name__).warning(
+                "tuning plan coverage mismatch: missing=%s (these layers "
+                "fall back to untuned dispatch) extra=%s (ignored)",
+                sorted(missing), sorted(extra))
+
+    def save_plan(self, path) -> None:
+        assert self.plan is not None, "engine has no plan to save"
+        self.plan.save(path)
+
+    @staticmethod
+    def _reports_from_plan(plan: TuningPlan):
+        return [LayerReport(name, plan.specs[name], ch.algorithm,
+                            ch.est_time, ch.est_bytes, ch.est_flops,
+                            ch.params)
+                for name, ch in plan.choices.items()]
+
+    # ------------------------------------------------------------------
 
     def run(self, image):
         """image: (H, W, 3) single image -> logits (classes,)."""
         return self._fwd(self.params, images=image[None])[0]
 
     def traffic_report(self):
-        """Per-stage bytes/flops — the energy proxy (DESIGN.md §7.5)."""
+        """Per-layer bytes/flops for the planned (spatial) conv sites —
+        the energy proxy (DESIGN.md §7.5); 1x1 convs are not included."""
         return self.reports

@@ -72,6 +72,28 @@ ALGORITHMS = {"ilpm": ilpm, "direct": direct, "im2col": im2col,
               "libdnn": libdnn, "winograd": winograd}
 
 
+def kernel_params(algorithm: str, params: dict) -> dict:
+    """Keep only the tuning params this algorithm's wrapper accepts."""
+    import inspect
+
+    accepted = inspect.signature(ALGORITHMS[algorithm]).parameters
+    if any(p.kind is inspect.Parameter.VAR_KEYWORD
+           for p in accepted.values()):
+        return dict(params)
+    return {k: v for k, v in params.items() if k in accepted}
+
+
+def dispatch(algorithm: str, x_padded, w, *, impl="auto", **params):
+    """Run one algorithm by name with its tuned kernel parameters.
+
+    Looks up ``ALGORITHMS`` at call time (so tests can spy on entries) and
+    drops params the target kernel does not take — a plan tuned for one
+    algorithm stays usable if dispatch falls back to another.
+    """
+    fn = ALGORITHMS[algorithm]
+    return fn(x_padded, w, impl=impl, **kernel_params(algorithm, params))
+
+
 # ---- 1D ops used by the model substrate ------------------------------
 
 def causal_conv1d(x, w, b=None, *, impl="auto", block_l=512):

@@ -52,42 +52,52 @@ def model_specs(cfg):
     return sp
 
 
-def _conv(p, x, stride, algorithm, padding="SAME"):
+def _conv(p, x, stride, algorithm, padding="SAME", choice=None):
     from repro.core import algorithms
 
     y = algorithms.conv2d(x, p["w"], stride=stride, padding=padding,
-                          algorithm=algorithm)
+                          algorithm=algorithm, choice=choice)
     return y * p["scale"] + p["bias"]
 
 
-def _block(p, x, bottleneck, stride, algorithm):
+def _block(p, x, bottleneck, stride, algorithm, name="", plan=None):
+    plan = plan or {}
     idn = x
     if "proj" in p:
         idn = _conv(p["proj"], x, stride, "xla")  # 1x1: plain matmul path
     if bottleneck:
         h = jax.nn.relu(_conv(p["c1"], x, 1, "xla"))
-        h = jax.nn.relu(_conv(p["c2"], h, stride, algorithm))
+        h = jax.nn.relu(_conv(p["c2"], h, stride, algorithm,
+                              choice=plan.get(f"{name}.c2")))
         h = _conv(p["c3"], h, 1, "xla")
     else:
-        h = jax.nn.relu(_conv(p["c1"], x, stride, algorithm))
-        h = _conv(p["c2"], h, 1, algorithm)
+        h = jax.nn.relu(_conv(p["c1"], x, stride, algorithm,
+                              choice=plan.get(f"{name}.c1")))
+        h = _conv(p["c2"], h, 1, algorithm, choice=plan.get(f"{name}.c2"))
     return jax.nn.relu(h + idn)
 
 
-def forward(params, cfg, images, *, algorithm="ilpm"):
+def forward(params, cfg, images, *, algorithm="ilpm", plan=None):
     """images: (B,H,W,3) NHWC -> logits (B, classes).
 
     `algorithm` selects the conv algorithm for every 3x3 conv — the paper's
-    five contenders are all valid values (plus 'xla' reference).
+    five contenders are all valid values (plus 'xla' reference). `plan`
+    optionally maps layer names ("stem", "s0b1.c2", ...) to autotuner
+    `Choice`s; a planned layer dispatches to its tuned algorithm with its
+    tuned kernel parameters, overriding `algorithm`. Plan lookup is
+    trace-time Python, so a jitted forward bakes in per-layer dispatch.
     """
+    plan = plan or {}
     blocks = cfg.extra["blocks"]
     bottleneck = cfg.extra["bottleneck"]
-    x = jax.nn.relu(_conv(params["stem"], images, 2, "xla"))
+    x = jax.nn.relu(_conv(params["stem"], images, 2, "xla",
+                          choice=plan.get("stem")))
     x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
                               (1, 2, 2, 1), "SAME")
     for si, n in enumerate(blocks):
         for bi in range(n):
             stride = 2 if (si > 0 and bi == 0) else 1
-            x = _block(params[f"s{si}b{bi}"], x, bottleneck, stride, algorithm)
+            x = _block(params[f"s{si}b{bi}"], x, bottleneck, stride,
+                       algorithm, name=f"s{si}b{bi}", plan=plan)
     x = x.mean(axis=(1, 2))
     return x @ params["fc"]["w"] + params["fc"]["b"]

@@ -16,8 +16,20 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+
+try:  # newer JAX exposes shard_map at the top level (check_vma kwarg)
+    from jax import shard_map as _shard_map
+    _REPLICATION_KWARG = "check_vma"
+except ImportError:  # pragma: no cover - depends on installed JAX
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _REPLICATION_KWARG = "check_rep"
 from jax.sharding import PartitionSpec as P
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """Version-tolerant shard_map with replication checking disabled."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_REPLICATION_KWARG: False})
 
 
 def quantize(x):
@@ -61,7 +73,7 @@ def compressed_psum_pod(grads, err_state, mesh):
 
         spec = P()  # per-pod replicated view of this tensor shard
         return shard_map(body, mesh=mesh, in_specs=(spec, spec),
-                         out_specs=(spec, spec), check_vma=False)(g, e)
+                         out_specs=(spec, spec))(g, e)
 
     flat_g, tdef = jax.tree.flatten(grads)
     flat_e = tdef.flatten_up_to(err_state)

@@ -64,7 +64,17 @@ def test_inference_engine_single_image():
     assert logits.shape == (cfg.vocab_size,)
     assert not bool(jnp.isnan(logits).any())
     reports = eng.traffic_report()
-    assert len(reports) == 4 and all(r.est_bytes > 0 for r in reports)
+    # every conv site: stem + 2 convs per basic block, one block per stage
+    assert len(reports) == 1 + 2 * sum(cfg.extra["blocks"])
+    assert all(r.est_bytes > 0 for r in reports)
+    # strided sites (stem, stage-entry c1) fall back to xla; stride-1 3x3
+    # sites carry a tuned algorithm with kernel params
+    by_name = {r.name: r for r in reports}
+    assert by_name["stem"].algorithm == "xla"
+    assert by_name["s1b0.c1"].algorithm == "xla"
+    assert by_name["s0b0.c1"].algorithm in ("ilpm", "direct", "libdnn",
+                                            "winograd", "im2col")
+    assert by_name["s0b0.c1"].params
 
 
 def test_engine_algorithms_agree():
