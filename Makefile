@@ -13,3 +13,12 @@ examples:
 .PHONY: bench
 bench:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/conv_algorithms.py
+
+.PHONY: bench-mobilenet
+bench-mobilenet:
+	PYTHONPATH=src:. $(PYTHON) benchmarks/mobilenet_layers.py
+
+# Validate every local link/anchor in README.md and docs/ (CI step).
+.PHONY: docs-check
+docs-check:
+	$(PYTHON) tools/check_docs_links.py README.md docs

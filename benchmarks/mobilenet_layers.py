@@ -1,0 +1,72 @@
+"""MobileNetV2 per-layer cost-model benchmark — the grouped-family analogue
+of the paper's Fig. 5 grid.
+
+For every conv site of MobileNetV2 at 224x224 (stem, each block's expand /
+depthwise / project, head) we report the tuned choice and the roofline time
+on each device's constants, plus the depthwise-vs-XLA and layer-mix
+aggregates that motivate the grouped kernels: Zhang et al. (2020) observe
+depthwise + pointwise layers dominate MobileNet inference time, and the
+per-layer split below reproduces that — pointwise GEMMs carry the FLOPs
+while depthwise layers are pure-bandwidth and live or die on residency.
+
+    PYTHONPATH=src:. python benchmarks/mobilenet_layers.py
+"""
+from __future__ import annotations
+
+from benchmarks.devices import DEVICES
+from repro.configs import get
+from repro.core.autotune import cost_model_select, xla_choice
+from repro.models import mobilenet
+
+
+def run():
+    cfg = get("mobilenet_v2")
+    sites = mobilenet.conv_specs(cfg)
+    rows = []
+    for dev, (peak, bw) in DEVICES.items():
+        for name, spec in sites:
+            tuned = cost_model_select(spec, peak_flops=peak, hbm_bw=bw)
+            xla = xla_choice(spec, peak_flops=peak, hbm_bw=bw)
+            kind = ("depthwise" if spec.depthwise
+                    else "pointwise" if spec.r == 1 else "dense")
+            rows.append({
+                "device": dev, "layer": name, "kind": kind,
+                "hw": f"{spec.h}x{spec.w}", "c": spec.c, "k": spec.k,
+                "stride": spec.stride,
+                "tuned": tuned.algorithm + "".join(
+                    f":{k}={v}" for k, v in tuned.params),
+                "t_us": round(tuned.est_time * 1e6, 2),
+                "t_xla_us": round(xla.est_time * 1e6, 2),
+                "flops": tuned.est_flops, "bytes": tuned.est_bytes,
+            })
+    return rows
+
+
+def headline(rows):
+    """Per-device layer-mix totals (the Zhang et al. observation)."""
+    out = {}
+    for dev in DEVICES:
+        mine = [r for r in rows if r["device"] == dev]
+        by_kind = {}
+        for kind in ("depthwise", "pointwise", "dense"):
+            by_kind[kind] = round(sum(r["t_us"] for r in mine
+                                      if r["kind"] == kind), 1)
+        total = sum(by_kind.values())
+        out[dev] = {"total_us": round(total, 1),
+                    **{f"{k}_share": round(v / total, 3)
+                       for k, v in by_kind.items()}}
+    return out
+
+
+def main():
+    rows = run()
+    cols = ["device", "layer", "kind", "hw", "c", "k", "stride", "tuned",
+            "t_us", "t_xla_us"]
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+    print("# layer-mix:", headline(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,8 @@
 
 Public API surface:
     repro.core        — conv2d / autotuner / single-image InferenceEngine
-    repro.kernels     — Pallas kernels (ilpm + the paper's 4 baselines)
+    repro.kernels     — Pallas kernels (ilpm + the paper's 4 baselines,
+                        depthwise/pointwise for MobileNet-style nets)
     repro.configs     — the 10 assigned architectures (+ ResNet) + shapes
     repro.launch      — mesh / dryrun / train / serve entry points
 """

@@ -17,6 +17,7 @@ from repro.configs import (  # noqa: F401
     jamba_1_5_large,
     mamba2_370m,
     minitron_8b,
+    mobilenet,
     qwen2_0_5b,
     resnet,
     whisper_base,

@@ -18,7 +18,16 @@ def tiny_variant(cfg: ArchConfig) -> ArchConfig:
         attn_chunk=64,
     )
     if cfg.family == "cnn":
-        return cfg.replace(**{**kw, "extra": {**cfg.extra, "blocks": (1, 1, 1, 1), "img": 32}})
+        extra = {**cfg.extra, "img": 32}
+        if "blocks" in extra:  # resnet family
+            extra["blocks"] = (1, 1, 1, 1)
+        if "settings" in extra:  # mobilenet family: one block per stage,
+            # keeping the structural variety (t=1 stage, strided stages,
+            # a residual-eligible stride-1 stage)
+            extra.update(settings=((1, 16, 1, 1), (6, 24, 1, 2),
+                                   (6, 24, 1, 1), (6, 40, 1, 2)),
+                         stem=16, head=64)
+        return cfg.replace(**{**kw, "extra": extra})
 
     if cfg.attn_impl == "mla":
         kw.update(num_heads=4, num_kv_heads=4, kv_lora_rank=32, q_lora_rank=48,

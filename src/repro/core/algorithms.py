@@ -2,12 +2,19 @@
 
 ``conv2d(x, w, algorithm=...)`` is how the framework consumes the paper's
 contribution: 'ilpm' | 'direct' | 'im2col' | 'libdnn' | 'winograd' run the
-corresponding kernels; 'auto' asks the autotuner; 'xla' is the
-lax.conv_general_dilated escape hatch (used for 1x1/strided convs where the
-paper's algorithms don't apply). Passing an explicit autotuner ``choice``
-(a ``repro.core.autotune.Choice``) pins both the algorithm *and* its tuned
-kernel parameters (``block_k``/``block_h``) — this is how a TuningPlan's
-per-layer decisions reach the kernels.
+corresponding dense kernels; 'depthwise' | 'pointwise' run the grouped
+family (MobileNet-style nets); 'auto' asks the autotuner; 'xla' is the
+lax.conv_general_dilated escape hatch (used for strided dense convs where
+the paper's algorithms don't apply). Passing an explicit autotuner
+``choice`` (a ``repro.core.autotune.Choice``) pins both the algorithm *and*
+its tuned kernel parameters (``block_k``/``block_h``/``block_c``) — this is
+how a TuningPlan's per-layer decisions reach the kernels.
+
+Grouped convs are detected from the filter shape: HWIO filters carry
+``C // groups`` channels on their input axis, so ``groups`` is the ratio of
+image channels to filter depth. Depthwise (groups == C == K) dispatches to
+the depthwise kernel at stride 1 or 2; other grouped convs fall back to the
+XLA reference.
 """
 from __future__ import annotations
 
@@ -19,16 +26,40 @@ from repro.core.convspec import ConvSpec
 from repro.kernels import ops, ref
 
 
+def _auto(x, w, stride):
+    """Trace-time tuner lookup (memoized per ConvSpec)."""
+    spec = ConvSpec.from_tensors(x, w, stride)
+    tuned = autotune.select(spec)
+    return tuned.algorithm, dict(tuned.params)
+
+
 def conv2d(x, w, *, stride=1, padding="SAME", algorithm="auto", impl="auto",
            choice=None):
-    """x: (B,H,W,C) NHWC; w: (R,S,C,K) HWIO -> (B,H',W',K)."""
-    R, S, C, K = w.shape
+    """x: (B,H,W,C) NHWC; w: (R,S,C/groups,K) HWIO -> (B,H',W',K)."""
+    R, S, Cg, K = w.shape
+    C = x.shape[-1]
+    assert C % Cg == 0, f"image channels {C} vs filter depth {Cg}"
+    groups = C // Cg
     if choice is not None:
         algorithm, params = choice.algorithm, dict(choice.params)
     else:
         params = {}
     if algorithm == "xla":
-        return ref.conv2d_reference(x, w, stride=stride, padding=padding)
+        return ref.conv2d_reference(x, w, stride=stride, padding=padding,
+                                    groups=groups)
+
+    # ---- grouped family: depthwise kernel or XLA fallback ------------
+    if groups > 1:
+        if algorithm == "auto":
+            algorithm, params = _auto(x, w, stride)
+        depthwise_ok = groups == C == K and stride in (1, 2)
+        if algorithm != "depthwise" or not depthwise_ok:
+            # tuner punted, or a grouped-but-not-depthwise conv
+            return ref.conv2d_reference(x, w, stride=stride, padding=padding,
+                                        groups=groups)
+        xp = ref.pad_same(x, R, S, stride=stride) if padding == "SAME" else x
+        return ops.dispatch("depthwise", xp, w, impl=impl, stride=stride,
+                            **params)
 
     if stride != 1:
         if (R, S) == (stride, stride) and padding == "VALID":
@@ -41,16 +72,20 @@ def conv2d(x, w, *, stride=1, padding="SAME", algorithm="auto", impl="auto",
             xr = xr.reshape(B, hp * wp, stride * stride * C)
             y = jnp.einsum("bpc,ck->bpk", xr, w.reshape(-1, K))
             return y.reshape(B, hp, wp, K)
-        # general strided conv: outside the paper's scope (its layers are
-        # stride-1 3x3) — XLA path, noted in DESIGN.md
+        # general strided dense conv: outside the kernel families (dense
+        # layers are stride-1 in the paper) — XLA path, noted in DESIGN.md
         return ref.conv2d_reference(x, w, stride=stride, padding=padding)
 
     if algorithm == "auto":
-        spec = ConvSpec.from_tensors(x, w, stride)
-        tuned = autotune.select(spec)
-        algorithm, params = tuned.algorithm, dict(tuned.params)
-        if algorithm == "xla":  # tuner punted (e.g. 1x1): reference path
+        algorithm, params = _auto(x, w, stride)
+        if algorithm == "xla":  # tuner punted: reference path
             return ref.conv2d_reference(x, w, stride=stride, padding=padding)
+
+    if algorithm == "pointwise":
+        if (R, S) != (1, 1):
+            algorithm = "ilpm"  # pointwise kernel is 1x1-only -> best dense
+        else:
+            return ops.dispatch("pointwise", x, w, impl=impl, **params)
 
     if padding == "SAME":
         xp = ref.pad_same(x, R, S)

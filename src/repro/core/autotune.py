@@ -60,12 +60,25 @@ def _el(spec):
 
 
 def tunable(spec: ConvSpec) -> bool:
-    """Whether the paper's algorithm family applies (stride-1 spatial conv).
+    """Whether a kernel family applies, i.e. the tuner has candidates.
 
-    Strided and 1x1/large-stem convs fall outside the five contenders and
-    run on the XLA reference path; spatial sites among them (the stem,
-    strided stage entries) still get a plan entry with an ``xla`` Choice.
+    Three tunable classes:
+      * dense stride-1 spatial convs — the paper's five contenders;
+      * depthwise convs (groups == c == k), stride 1 or 2 — the depthwise
+        kernel downsamples in-kernel, so MobileNet's strided depthwise
+        sites stay under the tuner;
+      * dense 1x1 stride-1 convs — the pointwise kernel.
+
+    Everything else (strided dense convs like the ResNet stem, grouped
+    non-depthwise convs) runs on the XLA reference path; spatial sites
+    among them still get a plan entry with an ``xla`` Choice.
     """
+    if spec.depthwise:
+        return spec.stride in (1, 2)
+    if spec.groups != 1:
+        return False  # general grouped conv: no kernel family yet
+    if spec.r == 1 and spec.s == 1:
+        return spec.stride == 1
     return spec.stride == 1 and spec.r > 1 and spec.s > 1
 
 
@@ -81,11 +94,38 @@ def _candidates(spec: ConvSpec):
     el = _el(spec)
     B, H, W, C, K, R, S = (spec.batch, spec.out_h, spec.out_w, spec.c,
                            spec.k, spec.r, spec.s)
-    img = B * (H + R - 1) * (W + S - 1) * C * el
-    filt = R * S * C * K * el
     out = B * H * W * K * el
     P = H * W
     cands = []
+
+    # --- depthwise: channel-slab grid, image/filter/output cut together ---
+    if spec.depthwise:
+        hp = (H - 1) * spec.stride + R
+        wp = (W - 1) * spec.stride + S
+        img = B * hp * wp * C * el
+        filt = R * S * C * el
+        for tc in (128, 256, 512):
+            tc = min(tc, C)
+            vmem = hp * wp * tc * el + R * S * tc * el + P * tc * 4
+            cands.append(("depthwise", (("block_c", tc),), img + filt + out,
+                          spec.flops, vmem))
+            if tc == C:
+                break
+        return cands
+
+    img = B * (H + R - 1) * (W + S - 1) * C * el
+    filt = R * S * C * K * el
+
+    # --- pointwise (1x1): image resident; K-tiled grid, single tap ---
+    if R == 1 and S == 1:
+        for tk in (128, 256, 512):
+            tk = min(tk, K)
+            vmem = (img // max(B, 1)) + C * tk * el + P * tk * 4
+            cands.append(("pointwise", (("block_k", tk),), img + filt + out,
+                          spec.flops, vmem))
+            if tk == K:
+                break
+        return cands
 
     # --- ilpm: image resident; filters streamed once; K-tiled grid ---
     for tk in (128, 256, 512):
@@ -153,17 +193,24 @@ def cost_model_select(spec: ConvSpec, *, peak_flops=PEAK_FLOPS, hbm_bw=HBM_BW,
 
 
 def _synth_inputs(spec: ConvSpec):
-    """Random padded input + filters matching the spec (measured mode)."""
+    """Random padded input + filters matching the spec (measured mode).
+
+    Group-aware: the filter depth is ``c // groups`` (1 for depthwise) and
+    the padded image dims follow the stride ((out-1)*stride + r; the
+    stride-1 case is the familiar h + r - 1). Pointwise specs get the
+    unpadded image (r == 1 makes both formulas agree).
+    """
     import jax
     import jax.numpy as jnp
 
     dtype = jnp.dtype(spec.dtype) if spec.dtype != "float32" else jnp.float32
-    x = jax.random.normal(
-        jax.random.key(0),
-        (spec.batch, spec.h + spec.r - 1, spec.w + spec.s - 1, spec.c),
-        dtype=dtype)
-    w = jax.random.normal(jax.random.key(1),
-                          (spec.r, spec.s, spec.c, spec.k), dtype=dtype)
+    hp = (spec.out_h - 1) * spec.stride + spec.r
+    wp = (spec.out_w - 1) * spec.stride + spec.s
+    x = jax.random.normal(jax.random.key(0),
+                          (spec.batch, hp, wp, spec.c), dtype=dtype)
+    w = jax.random.normal(
+        jax.random.key(1),
+        (spec.r, spec.s, spec.c_per_group, spec.k), dtype=dtype)
     return x, w
 
 
@@ -181,6 +228,11 @@ def measured_select(spec: ConvSpec, x=None, w=None, *, repeats=3,
     the cost model's pick when it is more than ``noise_floor`` (fraction)
     faster — the model acts as a prior under measurement noise. Set
     ``noise_floor=0`` on real hardware for pure wall-clock selection.
+
+    Non-tunable specs short-circuit to the ``xla`` Choice without timing
+    anything (there are no candidates to race). The spec's stride is
+    threaded to the kernels that take it (depthwise); ``ops.dispatch``
+    drops it for the stride-1-only dense kernels.
     """
     from repro.kernels import ops
 
@@ -195,12 +247,12 @@ def measured_select(spec: ConvSpec, x=None, w=None, *, repeats=3,
         if vmem > VMEM_BYTES:
             continue
         try:
-            ops.dispatch(algo, x, w, impl="pallas",
+            ops.dispatch(algo, x, w, impl="pallas", stride=spec.stride,
                          **dict(params)).block_until_ready()  # warm-up
             ts = []
             for _ in range(repeats):
                 t0 = time.perf_counter()
-                ops.dispatch(algo, x, w, impl="pallas",
+                ops.dispatch(algo, x, w, impl="pallas", stride=spec.stride,
                              **dict(params)).block_until_ready()
                 ts.append(time.perf_counter() - t0)
             t = min(ts)
@@ -297,7 +349,18 @@ class TuningPlan:
 
 def build_plan(named_specs, mode: str = "cost_model", *, repeats=3,
                noise_floor=0.5) -> TuningPlan:
-    """Tune every (name, ConvSpec) pair into a TuningPlan."""
+    """Tune every (name, ConvSpec) pair into a TuningPlan.
+
+    ``named_specs`` is any iterable of ``(layer_name, ConvSpec)`` — the
+    engine feeds it the model's ``conv_specs`` enumeration. Each spec goes
+    through ``select``, so results come from (and populate) the module's
+    mode-keyed memo cache: tuning N layers that share a shape costs one
+    tuning run, and repeated ``build_plan`` calls in one process are free.
+    Non-tunable sites (strided dense convs, grouped non-depthwise) still
+    get a plan entry with an ``xla`` Choice — the plan covers *every*
+    enumerated site, and deployment falls back per-site, never wholesale.
+    ``repeats``/``noise_floor`` only matter for ``mode="measured"``.
+    """
     plan = TuningPlan(mode=mode)
     for name, spec in named_specs:
         plan.specs[name] = spec

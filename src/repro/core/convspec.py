@@ -15,32 +15,56 @@ class ConvSpec:
     stride: int = 1
     batch: int = 1
     dtype: str = "float32"
+    groups: int = 1  # feature groups; groups == c == k is depthwise
+
+    def __post_init__(self):
+        assert self.c % self.groups == 0, (self.c, self.groups)
+        assert self.k % self.groups == 0, (self.k, self.groups)
+
+    @property
+    def c_per_group(self) -> int:
+        """Input channels each output channel convolves (filter depth)."""
+        return self.c // self.groups
+
+    @property
+    def depthwise(self) -> bool:
+        return self.groups > 1 and self.groups == self.c == self.k
 
     @property
     def out_h(self):
-        return self.h // self.stride
+        return -(-self.h // self.stride)  # SAME: ceil(h / stride)
 
     @property
     def out_w(self):
-        return self.w // self.stride
+        return -(-self.w // self.stride)
 
     @property
     def flops(self) -> int:
-        """Useful MACs x2 (stride-1 SAME)."""
+        """Useful MACs x2 (SAME padding): each of the k output channels
+        contracts only its group's c/groups input channels."""
         return 2 * self.batch * self.out_h * self.out_w * self.r * self.s \
-            * self.c * self.k
+            * self.c_per_group * self.k
 
     @property
     def bytes_min(self) -> int:
         """Compulsory traffic: image in + filters in + output out."""
         el = 2 if "16" in self.dtype else 4
         return el * (self.batch * self.h * self.w * self.c
-                     + self.r * self.s * self.c * self.k
+                     + self.r * self.s * self.c_per_group * self.k
                      + self.batch * self.out_h * self.out_w * self.k)
 
     @classmethod
     def from_tensors(cls, x, w, stride):
+        """Derive the spec from real tensors (NHWC image, HWIO filters).
+
+        Group-aware: grouped filters carry ``c // groups`` channels on their
+        input axis (depthwise weights are ``(r, s, 1, c)``), so ``groups`` is
+        recovered as the ratio of image channels to filter depth rather than
+        misreading the filter depth as the full input width.
+        """
         b, h, ww, c = x.shape
-        r, s, _, k = w.shape
+        r, s, c_per_group, k = w.shape
+        assert c % c_per_group == 0, (
+            f"image channels {c} not divisible by filter depth {c_per_group}")
         return cls(h=h, w=ww, c=c, k=k, r=r, s=s, stride=stride, batch=b,
-                   dtype=str(x.dtype))
+                   dtype=str(x.dtype), groups=c // c_per_group)

@@ -1,17 +1,16 @@
 """Single-image CNN inference engine — the paper's deployment scenario.
 
-Wraps a CNN (ResNet here) with the paper's tune-once/run-many flow (§2.3):
+Wraps a CNN (ResNet or a MobileNet-style net) with the paper's
+tune-once/run-many flow (§2.3):
 
-  1. ``_conv_specs`` enumerates the ConvSpec of every *spatial* conv site
-     in the network — the stem, both convs of every basic block, the 3x3
-     of every bottleneck block (at the bottleneck width), and the strided
-     stage-entry convs; 1x1 convs (bottleneck c1/c3, projection shortcuts)
-     are plain matmuls outside the paper's algorithm family and are not
-     planned or counted in the traffic report;
+  1. the model module's ``conv_specs`` enumerates the ConvSpec of every
+     planned conv site in the network — for ResNet the stem and every 3x3
+     (1x1s ride the XLA matmul path); for MobileNet the stem plus every
+     depthwise and pointwise site, strided depthwise included;
   2. the autotuner turns that list into a ``TuningPlan`` (cost-model or
      measured mode) mapping each layer name to its tuned Choice —
      algorithm plus kernel parameters;
-  3. the plan is threaded into ``resnet.forward`` and jitted, so the
+  3. the plan is threaded into the model's ``forward`` and jitted, so the
      compiled forward dispatches each layer to its own tuned kernel;
   4. plans serialize to JSON (``save_plan`` / ``TuningPlan.load``) so a
      device tunes once offline and deployments just load the plan.
@@ -30,7 +29,7 @@ import jax.numpy as jnp
 from repro.core import autotune
 from repro.core.autotune import TuningPlan
 from repro.core.convspec import ConvSpec
-from repro.models import resnet
+from repro.models.registry import cnn_module
 from repro.models.spec import init_params
 
 
@@ -58,8 +57,9 @@ class InferenceEngine:
                  plan=None, tune_mode="cost_model"):
         assert cfg.family == "cnn"
         self.cfg = cfg
+        self._model = cnn_module(cfg)
         self.params = params if params is not None else init_params(
-            resnet.model_specs(cfg), seed, cfg.param_dtype)
+            self._model.model_specs(cfg), seed, cfg.param_dtype)
         self.algorithm = algorithm
         if plan is not None and not isinstance(plan, TuningPlan):
             plan = TuningPlan.load(plan)  # a path: tune-once/deploy-many
@@ -70,48 +70,20 @@ class InferenceEngine:
         self.plan = plan
         self.reports = self._reports_from_plan(plan) if plan else []
         self._fwd = jax.jit(functools.partial(
-            resnet.forward, cfg=cfg,
-            algorithm="auto" if algorithm == "auto" else algorithm,
+            self._model.forward, cfg=cfg, algorithm=algorithm,
             plan=plan.choices if plan is not None else None))
 
     # ------------------------------------------------------------------
     # plan construction
 
     def _conv_specs(self):
-        """(name, ConvSpec) per spatial conv site, keyed like the params.
+        """(name, ConvSpec) per planned conv site, keyed like the params.
 
-        Walks the exact geometry of ``resnet.forward``: stem (7x7 stride 2)
-        then max-pool (stride 2), then each stage's blocks — the first
-        block of stages 1+ enters with stride 2, and bottleneck stages tune
-        the 3x3 at the bottleneck width (cout // 4).
+        Delegated to the model module (``resnet.conv_specs`` /
+        ``mobilenet.conv_specs``), which walks the exact geometry of its
+        ``forward``.
         """
-        img = self.cfg.extra["img"]
-        blocks = self.cfg.extra["blocks"]
-        bottleneck = self.cfg.extra["bottleneck"]
-        widths = [64, 128, 256, 512]
-        if bottleneck:
-            widths = [w * 4 for w in widths]
-        specs = [("stem", ConvSpec(h=img, w=img, c=3, k=64, r=7, s=7,
-                                   stride=2))]
-        size = img // 4  # stem stride 2, then 3x3/2 max-pool
-        cin = 64
-        for si, n in enumerate(blocks):
-            cout = widths[si]
-            for bi in range(n):
-                stride = 2 if (si > 0 and bi == 0) else 1
-                name = f"s{si}b{bi}"
-                if bottleneck:
-                    mid = cout // 4
-                    specs.append((f"{name}.c2", ConvSpec(
-                        h=size, w=size, c=mid, k=mid, stride=stride)))
-                else:
-                    specs.append((f"{name}.c1", ConvSpec(
-                        h=size, w=size, c=cin, k=cout, stride=stride)))
-                    specs.append((f"{name}.c2", ConvSpec(
-                        h=size // stride, w=size // stride, c=cout, k=cout)))
-                size //= stride
-                cin = cout
-        return specs
+        return self._model.conv_specs(self.cfg)
 
     def tune(self, mode="cost_model", **tune_kwargs) -> TuningPlan:
         """Build the per-layer TuningPlan (the offline step of §2.3).
@@ -160,6 +132,9 @@ class InferenceEngine:
         return self._fwd(self.params, images=image[None])[0]
 
     def traffic_report(self):
-        """Per-layer bytes/flops for the planned (spatial) conv sites —
-        the energy proxy (DESIGN.md §7.5); 1x1 convs are not included."""
+        """Per-layer bytes/flops for every planned conv site — the energy
+        proxy (DESIGN.md §7.5). Coverage follows the model module's
+        ``conv_specs``: ResNet plans the stem and 3x3s (its 1x1s ride the
+        unplanned XLA matmul path); MobileNet plans every depthwise *and*
+        pointwise site."""
         return self.reports

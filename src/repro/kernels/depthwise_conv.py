@@ -1,0 +1,74 @@
+"""Depthwise convolution — the MobileNet-family workhorse, ILP-M style.
+
+Depthwise layers dominate mobile inference time (Zhang et al. 2020) and are
+pure VPU work on TPU: each channel convolves only itself, so there is no
+C-contraction to feed the MXU. The ILP-M blocking transfers directly:
+
+  * channels C on the LANE dimension (the paper maps threads -> output
+    channels; depthwise output channels == input channels);
+  * the (padded) image tile is **VMEM-resident across the whole grid row**
+    — its channel slab's index map ignores nothing it doesn't have to, and
+    each grid step owns a `block_c` channel slab end-to-end (image slab,
+    filter slab, output slab all cut on the same axis), so nothing is
+    refetched;
+  * static tap loop: each (r, s) step is one strided window load times one
+    per-channel filter row, `H·W : 1` arithmetic:load on the filter operand
+    — the paper's `workgroup_size : 1` ratio, elementwise instead of MXU.
+
+Stride 1 and 2 both run in-kernel (MobileNet downsamples inside its
+depthwise layers), unlike the dense kernels where stride-2 falls to XLA.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, H, W, R, S, stride):
+    """x_ref: (1, Hp, Wp, TC) padded image channel slab, VMEM-pinned.
+    w_ref: (R, S, 1, TC) — the slab's per-channel filter taps.
+    o_ref: (1, H, W, TC).
+    """
+    x = x_ref[0]
+    TC = x.shape[-1]
+    acc = jnp.zeros((H, W, TC), jnp.float32)
+    for r in range(R):          # static taps — fully unrolled, VPU-pipelined
+        for s in range(S):
+            xs = x[r:r + (H - 1) * stride + 1:stride,
+                   s:s + (W - 1) * stride + 1:stride, :]
+            acc += xs.astype(jnp.float32) * w_ref[r, s, 0].astype(jnp.float32)
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "block_c", "interpret"))
+def depthwise_conv(x_padded, w, *, stride: int = 1, block_c: int = 128,
+                   interpret: bool = False):
+    """x_padded: (B, Hp, Wp, C) pre-padded; w: (R, S, 1, C) -> (B, H, W, C).
+
+    ``block_c`` tiles the channel axis (the tuned kernel parameter); the
+    grid is (batch, channel blocks) and every operand of one grid step is
+    the same channel slab, so VMEM holds image + filters + output for
+    `block_c` lanes at once.
+    """
+    B, Hp, Wp, C = x_padded.shape
+    R, S, cg, K = w.shape
+    assert cg == 1 and K == C, (
+        f"depthwise kernel wants (R,S,1,C) filters for C={C}, got {w.shape}")
+    H = (Hp - R) // stride + 1
+    W = (Wp - S) // stride + 1
+    tc = min(block_c, C)
+    grid = (B, pl.cdiv(C, tc))
+    return pl.pallas_call(
+        functools.partial(_kernel, H=H, W=W, R=R, S=S, stride=stride),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Hp, Wp, tc), lambda b, c: (b, 0, 0, c)),
+            pl.BlockSpec((R, S, 1, tc), lambda b, c: (0, 0, 0, c)),
+        ],
+        out_specs=pl.BlockSpec((1, H, W, tc), lambda b, c: (b, 0, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((B, H, W, C), x_padded.dtype),
+        interpret=interpret,
+    )(x_padded, w)

@@ -14,10 +14,12 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels import causal_conv1d as _cc
+from repro.kernels import depthwise_conv as _dw
 from repro.kernels import direct_conv as _dc
 from repro.kernels import ilpm_conv as _il
 from repro.kernels import im2col_conv as _im
 from repro.kernels import libdnn_conv as _lib
+from repro.kernels import pointwise_conv as _pw
 from repro.kernels import winograd_conv as _wg
 from repro.kernels.gemm import gemm  # noqa: F401  (public)
 
@@ -68,12 +70,47 @@ def winograd(x_padded, w, *, impl="auto", u=None):
     return ref.winograd_conv(x_padded, w)
 
 
+# ---- the grouped family (MobileNet depthwise/pointwise) --------------
+
+def depthwise(x_padded, w, *, impl="auto", stride=1, block_c=128):
+    """Depthwise conv: x (B,Hp,Wp,C) pre-padded, w (R,S,1,C) -> (B,H,W,C).
+
+    ``stride`` is geometry, not a tuned parameter — it comes from the call
+    site, while ``block_c`` comes from the tuner. Stride 1 and 2 run
+    in-kernel (MobileNet downsamples inside depthwise layers).
+    """
+    if _use_pallas(impl):
+        return _dw.depthwise_conv(x_padded, w, stride=stride,
+                                  block_c=block_c, interpret=_interp())
+    return ref.depthwise_conv(x_padded, w, stride=stride)
+
+
+def pointwise(x, w, *, impl="auto", block_k=128):
+    """1x1 conv: x (B,H,W,C) *unpadded*, w (1,1,C,K) -> (B,H,W,K)."""
+    if _use_pallas(impl):
+        return _pw.pointwise_conv(x, w, block_k=block_k, interpret=_interp())
+    return ref.pointwise_conv(x, w)
+
+
 ALGORITHMS = {"ilpm": ilpm, "direct": direct, "im2col": im2col,
-              "libdnn": libdnn, "winograd": winograd}
+              "libdnn": libdnn, "winograd": winograd,
+              "depthwise": depthwise, "pointwise": pointwise}
+
+# the paper's five contenders — interchangeable on any dense 3x3 conv;
+# the grouped family (depthwise/pointwise) has its own filter shapes
+DENSE_ALGORITHMS = ("ilpm", "direct", "im2col", "libdnn", "winograd")
 
 
 def kernel_params(algorithm: str, params: dict) -> dict:
-    """Keep only the tuning params this algorithm's wrapper accepts."""
+    """Keep only the params this algorithm's wrapper accepts.
+
+    The filter is what lets callers pass a superset of parameters — a
+    tuned ``block_k`` plus call-site geometry like ``stride`` — to any
+    algorithm: each wrapper receives exactly the keywords in its
+    signature and the rest are dropped silently. A wrapper declaring
+    ``**kwargs`` opts out of filtering and receives everything (the test
+    suite's spy wrappers rely on this).
+    """
     import inspect
 
     accepted = inspect.signature(ALGORITHMS[algorithm]).parameters
@@ -86,9 +123,21 @@ def kernel_params(algorithm: str, params: dict) -> dict:
 def dispatch(algorithm: str, x_padded, w, *, impl="auto", **params):
     """Run one algorithm by name with its tuned kernel parameters.
 
-    Looks up ``ALGORITHMS`` at call time (so tests can spy on entries) and
-    drops params the target kernel does not take — a plan tuned for one
-    algorithm stays usable if dispatch falls back to another.
+    This is the single funnel every planned conv site goes through: the
+    engine's jitted forward calls it with the layer's tuned algorithm
+    name and ``Choice.params``. Semantics:
+
+      * ``ALGORITHMS`` is looked up at *call time*, so tests can spy on
+        (or stub out) entries after import;
+      * ``params`` are filtered per-algorithm by ``kernel_params`` — a
+        plan tuned for one algorithm stays usable if dispatch falls back
+        to another whose kernel takes different knobs;
+      * ``impl`` selects pallas vs jnp per the module policy above; the
+        algorithm itself never changes with ``impl``, only its backend.
+
+    ``x_padded`` must already carry the algorithm's expected padding
+    (``pointwise`` takes the raw image; everything else takes SAME-padded
+    input — ``repro.core.algorithms.conv2d`` handles this).
     """
     fn = ALGORITHMS[algorithm]
     return fn(x_padded, w, impl=impl, **kernel_params(algorithm, params))

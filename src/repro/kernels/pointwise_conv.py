@@ -1,0 +1,56 @@
+"""Pointwise (1x1) convolution — the other half of the MobileNet family.
+
+A 1x1 conv is a single (pixels, C) @ (C, K) GEMM; the ILP-M mapping is the
+degenerate one-tap case of `ilpm_conv`:
+
+  * output channels K on the LANE dimension, K-tiled grid;
+  * the image tile is **VMEM-resident across the whole grid row** (its
+    BlockSpec index map ignores the K axis) — expand/project pairs in
+    inverted-residual blocks reread the same activations, so residency is
+    where the traffic win is;
+  * one MXU contraction per grid step, no halo and no padding (R=S=1).
+
+Kept separate from `ilpm` so the tuner can cost it without tap-loop
+overheads and so dispatch can skip SAME padding entirely.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, H, W):
+    """x_ref: (1, H, W, C) — full image, VMEM-pinned.
+    w_ref: (1, 1, C, TK) — one output-channel slab.
+    o_ref: (1, H, W, TK).
+    """
+    C = x_ref.shape[-1]
+    TK = w_ref.shape[-1]
+    xs = x_ref[0].reshape(H * W, C)
+    acc = jnp.dot(xs, w_ref[0, 0], preferred_element_type=jnp.float32)
+    o_ref[0] = acc.reshape(H, W, TK).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def pointwise_conv(x, w, *, block_k: int = 128, interpret: bool = False):
+    """x: (B, H, W, C) — no padding needed; w: (1,1,C,K) -> (B, H, W, K)."""
+    B, H, W, C = x.shape
+    R, S, _, K = w.shape
+    assert (R, S) == (1, 1), f"pointwise kernel wants 1x1 filters, got {w.shape}"
+    tk = min(block_k, K)
+    grid = (B, pl.cdiv(K, tk))
+    return pl.pallas_call(
+        functools.partial(_kernel, H=H, W=W),
+        grid=grid,
+        in_specs=[
+            # index map ignores k -> image stays resident across the K row
+            pl.BlockSpec((1, H, W, C), lambda b, k: (b, 0, 0, 0)),
+            pl.BlockSpec((1, 1, C, tk), lambda b, k: (0, 0, 0, k)),
+        ],
+        out_specs=pl.BlockSpec((1, H, W, tk), lambda b, k: (b, 0, 0, k)),
+        out_shape=jax.ShapeDtypeStruct((B, H, W, K), x.dtype),
+        interpret=interpret,
+    )(x, w)

@@ -16,17 +16,29 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def conv2d_reference(x, w, *, stride=1, padding="SAME"):
-    """Ground truth. x: (B,H,W,C), w: (R,S,C,K)."""
+def conv2d_reference(x, w, *, stride=1, padding="SAME", groups=1):
+    """Ground truth. x: (B,H,W,C), w: (R,S,C/groups,K).
+
+    ``groups`` is lax's ``feature_group_count``; ``groups == C == K`` is a
+    depthwise conv with weights (R, S, 1, C).
+    """
     return jax.lax.conv_general_dilated(
         x, w, window_strides=(stride, stride), padding=padding,
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
 
 
-def pad_same(x, r, s):
-    """Explicit SAME (stride-1) padding so kernels see pre-padded inputs."""
-    ph, pw = (r - 1) // 2, (s - 1) // 2
-    return jnp.pad(x, ((0, 0), (ph, r - 1 - ph), (pw, s - 1 - pw), (0, 0)))
+def pad_same(x, r, s, stride=1):
+    """Explicit SAME padding so kernels see pre-padded inputs.
+
+    Matches XLA's SAME convention: total pad (out-1)*stride + r - h split
+    low-first; stride-1 reduces to the familiar symmetric (r-1)//2 halo.
+    """
+    h, w = x.shape[1], x.shape[2]
+    ph = max((-(-h // stride) - 1) * stride + r - h, 0)
+    pw = max((-(-w // stride) - 1) * stride + s - w, 0)
+    return jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2),
+                       (pw // 2, pw - pw // 2), (0, 0)))
 
 
 # ----------------------------------------------------------------------
@@ -154,6 +166,38 @@ def winograd_conv(x_padded, w):
     m = jnp.einsum("bxytc,xyck->bxytk", v, u,
                    preferred_element_type=jnp.float32)    # 16 batched GEMMs
     return winograd_output_transform(m.astype(x_padded.dtype), H, W)
+
+
+# ----------------------------------------------------------------------
+# depthwise / pointwise (the MobileNet family factorization)
+
+
+def depthwise_conv(x_padded, w, *, stride=1):
+    """x_padded: (B, Hp, Wp, C) pre-padded; w: (R, S, 1, C) -> (B, H, W, C).
+
+    The algorithm's structure in jnp: static tap loop, each tap a strided
+    window of the resident image scaled by one per-channel filter row — all
+    VPU work, no contraction (each channel convolves only itself).
+    """
+    R, S, _, C = w.shape
+    B, Hp, Wp, _ = x_padded.shape
+    H = (Hp - R) // stride + 1
+    W = (Wp - S) // stride + 1
+    acc = jnp.zeros((B, H, W, C), jnp.float32)
+    for r in range(R):
+        for s in range(S):
+            xs = x_padded[:, r:r + (H - 1) * stride + 1:stride,
+                          s:s + (W - 1) * stride + 1:stride, :]
+            acc = acc + xs.astype(jnp.float32) * w[r, s, 0].astype(jnp.float32)
+    return acc.astype(x_padded.dtype)
+
+
+def pointwise_conv(x, w):
+    """x: (B, H, W, C); w: (1, 1, C, K) -> (B, H, W, K).
+
+    A 1x1 conv is one (pixels, C) @ (C, K) GEMM — no padding, no taps."""
+    return jnp.einsum("bhwc,ck->bhwk", x, w[0, 0],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
 
 
 # ----------------------------------------------------------------------

@@ -1,0 +1,112 @@
+"""MobileNetV2-style net — the mobile workload the paper targets.
+
+Inverted-residual blocks (expand 1x1 -> depthwise 3x3 -> project 1x1) built
+entirely from ``repro.core.algorithms.conv2d`` sites, so the whole backbone
+runs under the TuningPlan flow exactly like ``resnet.forward``: every
+pointwise site dispatches the pointwise kernel, every depthwise site (stride
+1 *and* 2 — the depthwise kernel downsamples in-kernel) the depthwise
+kernel, each with its per-layer tuned block parameters. Zhang et al. (2020)
+show these two layer types dominate mobile inference time, which is why they
+get their own kernels rather than riding the dense five.
+
+Config ``extra`` keys: ``settings`` — MobileNetV2's (t, c, n, s) rows
+(expansion, out channels, repeats, first-block stride); ``stem`` / ``head``
+widths; ``img`` input size; ``arch: "mobilenet"`` routes the engine here.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.models.resnet import _conv, _conv_spec
+from repro.models.spec import ParamSpec
+
+
+def _dw_spec(c):
+    """Depthwise 3x3: HWIO filters (3, 3, 1, C) + folded BN."""
+    return {"w": ParamSpec((3, 3, 1, c), (None, None, None, None)),
+            "scale": ParamSpec((c,), (None,), "ones"),
+            "bias": ParamSpec((c,), (None,), "zeros")}
+
+
+def _blocks(cfg):
+    """Yield (name, cin, mid, cout, stride) per inverted-residual block."""
+    cin = cfg.extra["stem"]
+    for si, (t, c, n, s) in enumerate(cfg.extra["settings"]):
+        for bi in range(n):
+            yield (f"s{si}b{bi}", cin, cin * t, c, s if bi == 0 else 1)
+            cin = c
+
+
+def model_specs(cfg):
+    sp = {"stem": _conv_spec(3, 3, 3, cfg.extra["stem"])}
+    for name, cin, mid, cout, _ in _blocks(cfg):
+        block = {}
+        if mid != cin:  # t == 1 blocks skip the expansion conv
+            block["pw1"] = _conv_spec(1, 1, cin, mid)
+        block["dw"] = _dw_spec(mid)
+        block["pw2"] = _conv_spec(1, 1, mid, cout)
+        sp[name] = block
+        last = cout
+    sp["head"] = _conv_spec(1, 1, last, cfg.extra["head"])
+    sp["fc"] = {"w": ParamSpec((cfg.extra["head"], cfg.vocab_size),
+                               (None, None)),
+                "b": ParamSpec((cfg.vocab_size,), (None,), "zeros")}
+    return sp
+
+
+def conv_specs(cfg):
+    """(name, ConvSpec) per conv site, keyed like the params — the plan
+    enumeration the engine tunes. Walks the exact geometry of ``forward``:
+    stem 3x3 stride 2, then per block pw1 (1x1) at the incoming size,
+    dw (depthwise, carries the block stride), pw2 (1x1) at the downsampled
+    size; finally the 1x1 head."""
+    from repro.core.convspec import ConvSpec
+
+    img = cfg.extra["img"]
+    specs = [("stem", ConvSpec(h=img, w=img, c=3, k=cfg.extra["stem"],
+                               stride=2))]
+    size = -(-img // 2)
+    for name, cin, mid, cout, stride in _blocks(cfg):
+        if mid != cin:
+            specs.append((f"{name}.pw1", ConvSpec(h=size, w=size, c=cin,
+                                                  k=mid, r=1, s=1)))
+        specs.append((f"{name}.dw", ConvSpec(h=size, w=size, c=mid, k=mid,
+                                             stride=stride, groups=mid)))
+        size = -(-size // stride)
+        specs.append((f"{name}.pw2", ConvSpec(h=size, w=size, c=mid, k=cout,
+                                              r=1, s=1)))
+        last = cout
+    specs.append(("head", ConvSpec(h=size, w=size, c=last,
+                                   k=cfg.extra["head"], r=1, s=1)))
+    return specs
+
+
+def forward(params, cfg, images, *, algorithm="auto", plan=None):
+    """images: (B,H,W,3) NHWC -> logits (B, classes).
+
+    `plan` maps layer names ("stem", "s0b0.dw", "s1b0.pw1", ...) to
+    autotuner `Choice`s, same contract as ``resnet.forward``: a planned
+    layer dispatches to its tuned algorithm with its tuned kernel params,
+    overriding `algorithm`. Plan lookup is trace-time Python, so a jitted
+    forward bakes in per-layer dispatch. Activations are ReLU6 (the
+    MobileNetV2 nonlinearity); projection convs are linear.
+    """
+    plan = plan or {}
+    x = jax.nn.relu6(_conv(params["stem"], images, 2, "xla",
+                           choice=plan.get("stem")))
+    for name, cin, mid, cout, stride in _blocks(cfg):
+        p = params[name]
+        h = x
+        if "pw1" in p:
+            h = jax.nn.relu6(_conv(p["pw1"], h, 1, algorithm,
+                                   choice=plan.get(f"{name}.pw1")))
+        h = jax.nn.relu6(_conv(p["dw"], h, stride, algorithm,
+                               choice=plan.get(f"{name}.dw")))
+        h = _conv(p["pw2"], h, 1, algorithm, choice=plan.get(f"{name}.pw2"))
+        if stride == 1 and cin == cout:
+            h = h + x
+        x = h
+    x = jax.nn.relu6(_conv(params["head"], x, 1, algorithm,
+                           choice=plan.get("head")))
+    x = x.mean(axis=(1, 2))
+    return x @ params["fc"]["w"] + params["fc"]["b"]

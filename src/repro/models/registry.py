@@ -3,13 +3,19 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.models import encdec, lm, resnet
+from repro.models import encdec, lm, mobilenet, resnet
 from repro.models import spec as pspec
+
+
+def cnn_module(cfg):
+    """The CNN family module (forward / model_specs / conv_specs) for a
+    config — ``extra["arch"]`` routes; ResNet is the default."""
+    return mobilenet if cfg.extra.get("arch") == "mobilenet" else resnet
 
 
 def model_specs(cfg):
     if cfg.family == "cnn":
-        return resnet.model_specs(cfg)
+        return cnn_module(cfg).model_specs(cfg)
     if cfg.is_encoder_decoder:
         return encdec.model_specs(cfg)
     return lm.model_specs(cfg)
@@ -17,7 +23,7 @@ def model_specs(cfg):
 
 def forward_fn(cfg):
     if cfg.family == "cnn":
-        return resnet.forward
+        return cnn_module(cfg).forward
     if cfg.is_encoder_decoder:
         return encdec.forward
     return lm.forward
@@ -33,7 +39,7 @@ def count_params(cfg, active_only: bool = False) -> int:
     """Parameter count from the spec tree; `active_only` counts only the
     routed experts a token actually visits (MODEL_FLOPS for MoE)."""
     if cfg.family == "cnn":
-        return pspec.count(resnet.model_specs(cfg))
+        return pspec.count(cnn_module(cfg).model_specs(cfg))
     tree = model_specs(cfg)
     total = pspec.count(tree)
     if active_only and cfg.num_experts:

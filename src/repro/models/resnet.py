@@ -52,6 +52,49 @@ def model_specs(cfg):
     return sp
 
 
+def conv_specs(cfg):
+    """(name, ConvSpec) per spatial conv site, keyed like the params —
+    the plan enumeration the engine tunes.
+
+    Walks the exact geometry of ``forward``: stem (7x7 stride 2) then
+    max-pool (stride 2), then each stage's blocks — the first block of
+    stages 1+ enters with stride 2, and bottleneck stages tune the 3x3 at
+    the bottleneck width (cout // 4). 1x1 convs (bottleneck c1/c3,
+    projection shortcuts) run on the hardcoded XLA path in ``forward`` and
+    are not planned or counted in the traffic report.
+    """
+    from repro.core.convspec import ConvSpec
+
+    img = cfg.extra["img"]
+    blocks = cfg.extra["blocks"]
+    bottleneck = cfg.extra["bottleneck"]
+    widths = [64, 128, 256, 512]
+    if bottleneck:
+        widths = [w * 4 for w in widths]
+    specs = [("stem", ConvSpec(h=img, w=img, c=3, k=64, r=7, s=7,
+                               stride=2))]
+    size = img // 4  # stem stride 2, then 3x3/2 max-pool
+    cin = 64
+    for si, n in enumerate(blocks):
+        cout = widths[si]
+        for bi in range(n):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            name = f"s{si}b{bi}"
+            if bottleneck:
+                mid = cout // 4
+                specs.append((f"{name}.c2", ConvSpec(
+                    h=size, w=size, c=mid, k=mid, stride=stride)))
+            else:
+                specs.append((f"{name}.c1", ConvSpec(
+                    h=size, w=size, c=cin, k=cout, stride=stride)))
+                specs.append((f"{name}.c2", ConvSpec(
+                    h=-(-size // stride), w=-(-size // stride), c=cout,
+                    k=cout)))
+            size = -(-size // stride)  # SAME: ceil, matching the forward
+            cin = cout
+    return specs
+
+
 def _conv(p, x, stride, algorithm, padding="SAME", choice=None):
     from repro.core import algorithms
 

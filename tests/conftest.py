@@ -7,3 +7,22 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+def spy_algorithms(monkeypatch):
+    """Wrap every registered conv kernel; record (algorithm, params).
+
+    Shared by the plan-dispatch tests: the spy wrappers take ``**params``
+    (VAR_KEYWORD), so ``ops.kernel_params`` passes dispatch's kwargs
+    through untouched and the recorded params are exactly what dispatch
+    was called with.
+    """
+    from repro.kernels import ops
+
+    calls = []
+    for name, fn in list(ops.ALGORITHMS.items()):
+        def wrapper(x, w, *, impl="auto", _name=name, _fn=fn, **params):
+            calls.append((_name, tuple(sorted(params.items()))))
+            return _fn(x, w, impl=impl, **params)
+        monkeypatch.setitem(ops.ALGORITHMS, name, wrapper)
+    return calls

@@ -57,8 +57,8 @@ def test_all_algorithms_agree(h, w, c, k, seed):
     """The five algorithms compute the same convolution (paper's premise)."""
     x, wgt = _conv_case(h, w, c, k, seed)
     xp = ref.pad_same(x, 3, 3)
-    ys = {name: np.asarray(fn(xp, wgt, impl="jnp"))
-          for name, fn in ops.ALGORITHMS.items()}
+    ys = {name: np.asarray(ops.ALGORITHMS[name](xp, wgt, impl="jnp"))
+          for name in ops.DENSE_ALGORITHMS}
     base = ys.pop("ilpm")
     scale = max(float(np.abs(base).max()), 1e-3)
     for name, y in ys.items():

@@ -12,26 +12,19 @@ from repro.configs import get, tiny_variant
 from repro.core import InferenceEngine, TuningPlan, build_plan
 from repro.core.autotune import (Choice, ConvSpec, cost_model_select,
                                  measured_select)
+from conftest import spy_algorithms as _spy_algorithms
 from repro.kernels import ops
 
 KEY = jax.random.key(0)
 
 
-def _spy_algorithms(monkeypatch):
-    """Wrap every registered conv kernel; record (algorithm, params)."""
-    calls = []
-    for name, fn in list(ops.ALGORITHMS.items()):
-        def wrapper(x, w, *, impl="auto", _name=name, _fn=fn, **params):
-            calls.append((_name, tuple(sorted(params.items()))))
-            return _fn(x, w, impl=impl, **params)
-        monkeypatch.setitem(ops.ALGORITHMS, name, wrapper)
-    return calls
-
-
 def test_plan_json_roundtrip(tmp_path):
     specs = [("a", ConvSpec(h=8, w=8, c=16, k=16)),
              ("b", ConvSpec(h=4, w=4, c=32, k=32)),
-             ("stem", ConvSpec(h=32, w=32, c=3, k=64, r=7, s=7, stride=2))]
+             ("stem", ConvSpec(h=32, w=32, c=3, k=64, r=7, s=7, stride=2)),
+             # grouped sites: depthwise (strided) + pointwise 1x1
+             ("dw", ConvSpec(h=8, w=8, c=32, k=32, groups=32, stride=2)),
+             ("pw", ConvSpec(h=8, w=8, c=32, k=64, r=1, s=1))]
     plan = build_plan(specs, mode="cost_model")
     back = TuningPlan.from_json(plan.to_json())
     assert back.mode == plan.mode

@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""Markdown link checker for the documentation surface (no dependencies).
+
+Scans the given markdown files/directories for inline links and validates
+every *local* target: relative file links must resolve to an existing file
+or directory, and fragment links into a markdown file must match one of its
+headings (GitHub anchor convention). External (http/https/mailto) links are
+reported but not fetched — CI must stay offline-deterministic.
+
+    python tools/check_docs_links.py README.md docs
+
+Exits 1 listing every broken link, so stale doc references fail fast.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#+\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def _anchor(heading: str) -> str:
+    """GitHub's heading -> anchor slug (lowercase, drop punctuation,
+    spaces to dashes)."""
+    slug = heading.strip().lower()
+    slug = re.sub(r"[^\w\- ]", "", slug)
+    return slug.replace(" ", "-")
+
+
+def _anchors(md_path: Path) -> set[str]:
+    text = CODE_FENCE_RE.sub("", md_path.read_text(encoding="utf-8"))
+    return {_anchor(h) for h in HEADING_RE.findall(text)}
+
+
+def check_file(md_path: Path) -> list[str]:
+    errors = []
+    text = CODE_FENCE_RE.sub("", md_path.read_text(encoding="utf-8"))
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue  # external: listed as out of scope, never fetched
+        path_part, _, fragment = target.partition("#")
+        dest = md_path if not path_part \
+            else (md_path.parent / path_part).resolve()
+        if not dest.exists():
+            errors.append(f"{md_path}: broken link -> {target}")
+            continue
+        if fragment and dest.suffix == ".md":
+            if _anchor(fragment) not in _anchors(dest):
+                errors.append(f"{md_path}: missing anchor -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    roots = [Path(a) for a in argv] or [Path("README.md"), Path("docs")]
+    files: list[Path] = []
+    for root in roots:
+        if root.is_dir():
+            files.extend(sorted(root.rglob("*.md")))
+        elif root.exists():
+            files.append(root)
+        else:
+            print(f"check_docs_links: no such path {root}", file=sys.stderr)
+            return 2
+    errors = [e for f in files for e in check_file(f)]
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_docs_links: {len(files)} files, "
+          f"{len(errors)} broken links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
