@@ -18,6 +18,13 @@ bench:
 bench-mobilenet:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/mobilenet_layers.py
 
+# Machine-readable per-layer bench (tiny config) — the CI perf-trajectory
+# artifact: per-site algorithm, tuned params, cost-model estimates, and
+# interpret-mode proxy timings.
+.PHONY: bench-json
+bench-json:
+	PYTHONPATH=src:. $(PYTHON) benchmarks/run.py --json BENCH_conv.json
+
 # Validate every local link/anchor in README.md and docs/ (CI step).
 .PHONY: docs-check
 docs-check:

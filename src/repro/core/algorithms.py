@@ -4,17 +4,30 @@
 contribution: 'ilpm' | 'direct' | 'im2col' | 'libdnn' | 'winograd' run the
 corresponding dense kernels; 'depthwise' | 'pointwise' run the grouped
 family (MobileNet-style nets); 'auto' asks the autotuner; 'xla' is the
-lax.conv_general_dilated escape hatch (used for strided dense convs where
-the paper's algorithms don't apply). Passing an explicit autotuner
-``choice`` (a ``repro.core.autotune.Choice``) pins both the algorithm *and*
-its tuned kernel parameters (``block_k``/``block_h``/``block_c``) — this is
-how a TuningPlan's per-layer decisions reach the kernels.
+lax.conv_general_dilated escape hatch (grouped-but-not-depthwise convs,
+strides > 2). Passing an explicit autotuner ``choice`` (a
+``repro.core.autotune.Choice``) pins both the algorithm *and* its tuned
+kernel parameters (``block_k``/``block_h``/``block_c``) — this is how a
+TuningPlan's per-layer decisions reach the kernels.
+
+Stride 2 stays in-kernel for every family: ilpm/direct slide strided tap
+windows over the resident image (the ResNet 7x7/2 stem and stage-entry
+3x3/2s), pointwise subsamples in-kernel (1x1/2 projection shortcuts), and
+depthwise always downsampled in-kernel. Only im2col/libdnn/winograd are
+stride-1-only; forcing one of them on a strided site falls back to ilpm.
+
+The optional fused epilogue — ``scale``/``bias`` (folded BatchNorm, (K,)
+vectors) and ``act`` ('relu' | 'relu6') — is threaded through dispatch into
+the kernels, which apply it inside their output write: conv+BN+act costs
+one HBM pass instead of three. The XLA escape hatch applies the identical
+math as separate ops. ``u`` optionally carries a precomputed Winograd
+filter transform (see ``InferenceEngine``: computed once per plan build).
 
 Grouped convs are detected from the filter shape: HWIO filters carry
 ``C // groups`` channels on their input axis, so ``groups`` is the ratio of
-image channels to filter depth. Depthwise (groups == C == K) dispatches to
-the depthwise kernel at stride 1 or 2; other grouped convs fall back to the
-XLA reference.
+image channels to filter depth. Depthwise (groups == C, K = M·C for any
+channel multiplier M) dispatches to the depthwise kernel at stride 1 or 2;
+other grouped convs fall back to the XLA reference.
 """
 from __future__ import annotations
 
@@ -25,6 +38,9 @@ from repro.core import autotune
 from repro.core.convspec import ConvSpec
 from repro.kernels import ops, ref
 
+# kernels that downsample in-kernel (strided tap windows / subsampling)
+STRIDED_DENSE = ("ilpm", "direct")
+
 
 def _auto(x, w, stride):
     """Trace-time tuner lookup (memoized per ConvSpec)."""
@@ -34,61 +50,67 @@ def _auto(x, w, stride):
 
 
 def conv2d(x, w, *, stride=1, padding="SAME", algorithm="auto", impl="auto",
-           choice=None):
+           choice=None, scale=None, bias=None, act=None, u=None):
     """x: (B,H,W,C) NHWC; w: (R,S,C/groups,K) HWIO -> (B,H',W',K)."""
     R, S, Cg, K = w.shape
     C = x.shape[-1]
     assert C % Cg == 0, f"image channels {C} vs filter depth {Cg}"
     groups = C // Cg
+    ep = dict(scale=scale, bias=bias, act=act)
     if choice is not None:
         algorithm, params = choice.algorithm, dict(choice.params)
     else:
         params = {}
     if algorithm == "xla":
-        return ref.conv2d_reference(x, w, stride=stride, padding=padding,
-                                    groups=groups)
+        return ref.apply_epilogue(
+            ref.conv2d_reference(x, w, stride=stride, padding=padding,
+                                 groups=groups), **ep)
 
     # ---- grouped family: depthwise kernel or XLA fallback ------------
     if groups > 1:
         if algorithm == "auto":
             algorithm, params = _auto(x, w, stride)
-        depthwise_ok = groups == C == K and stride in (1, 2)
+        depthwise_ok = groups == C and K % C == 0 and stride in (1, 2)
         if algorithm != "depthwise" or not depthwise_ok:
             # tuner punted, or a grouped-but-not-depthwise conv
-            return ref.conv2d_reference(x, w, stride=stride, padding=padding,
-                                        groups=groups)
+            return ref.apply_epilogue(
+                ref.conv2d_reference(x, w, stride=stride, padding=padding,
+                                     groups=groups), **ep)
         xp = ref.pad_same(x, R, S, stride=stride) if padding == "SAME" else x
         return ops.dispatch("depthwise", xp, w, impl=impl, stride=stride,
-                            **params)
+                            **ep, **params)
 
-    if stride != 1:
-        if (R, S) == (stride, stride) and padding == "VALID":
-            # non-overlapping patch conv (ViT patch embed): degenerate ILP-M
-            # — a single "tap block", i.e. reshape + matmul, K on lanes.
-            B, H, W, _ = x.shape
-            hp, wp = H // stride, W // stride
-            xr = x[:, :hp * stride, :wp * stride].reshape(
-                B, hp, stride, wp, stride, C).transpose(0, 1, 3, 2, 4, 5)
-            xr = xr.reshape(B, hp * wp, stride * stride * C)
-            y = jnp.einsum("bpc,ck->bpk", xr, w.reshape(-1, K))
-            return y.reshape(B, hp, wp, K)
-        # general strided dense conv: outside the kernel families (dense
-        # layers are stride-1 in the paper) — XLA path, noted in DESIGN.md
-        return ref.conv2d_reference(x, w, stride=stride, padding=padding)
+    if stride != 1 and (R, S) == (stride, stride) and padding == "VALID":
+        # non-overlapping patch conv (ViT patch embed): degenerate ILP-M
+        # — a single "tap block", i.e. reshape + matmul, K on lanes.
+        B, H, W, _ = x.shape
+        hp, wp = H // stride, W // stride
+        xr = x[:, :hp * stride, :wp * stride].reshape(
+            B, hp, stride, wp, stride, C).transpose(0, 1, 3, 2, 4, 5)
+        xr = xr.reshape(B, hp * wp, stride * stride * C)
+        y = jnp.einsum("bpc,ck->bpk", xr, w.reshape(-1, K))
+        return ref.apply_epilogue(y.reshape(B, hp, wp, K), **ep)
 
     if algorithm == "auto":
         algorithm, params = _auto(x, w, stride)
-        if algorithm == "xla":  # tuner punted: reference path
-            return ref.conv2d_reference(x, w, stride=stride, padding=padding)
+        if algorithm == "xla":  # tuner punted (e.g. stride > 2)
+            return ref.apply_epilogue(
+                ref.conv2d_reference(x, w, stride=stride, padding=padding),
+                **ep)
 
     if algorithm == "pointwise":
         if (R, S) != (1, 1):
             algorithm = "ilpm"  # pointwise kernel is 1x1-only -> best dense
         else:
-            return ops.dispatch("pointwise", x, w, impl=impl, **params)
+            return ops.dispatch("pointwise", x, w, impl=impl, stride=stride,
+                                **ep, **params)
+
+    if stride != 1 and algorithm not in STRIDED_DENSE:
+        # im2col/libdnn/winograd have no strided kernels -> best strided
+        algorithm = "ilpm"
 
     if padding == "SAME":
-        xp = ref.pad_same(x, R, S)
+        xp = ref.pad_same(x, R, S, stride=stride)
     elif padding == "VALID":
         xp = x
     else:
@@ -98,4 +120,7 @@ def conv2d(x, w, *, stride=1, padding="SAME", algorithm="auto", impl="auto",
         H, W = xp.shape[1] - R + 1, xp.shape[2] - S + 1
         if (R, S) != (3, 3) or H % 2 or W % 2:
             algorithm = "ilpm"  # winograd F(2,3) inapplicable -> best direct
-    return ops.dispatch(algorithm, xp, w, impl=impl, **params)
+        elif u is not None:
+            params["u"] = u
+    return ops.dispatch(algorithm, xp, w, impl=impl, stride=stride,
+                        **ep, **params)

@@ -62,76 +62,100 @@ def _el(spec):
 def tunable(spec: ConvSpec) -> bool:
     """Whether a kernel family applies, i.e. the tuner has candidates.
 
-    Three tunable classes:
-      * dense stride-1 spatial convs — the paper's five contenders;
-      * depthwise convs (groups == c == k), stride 1 or 2 — the depthwise
-        kernel downsamples in-kernel, so MobileNet's strided depthwise
-        sites stay under the tuner;
-      * dense 1x1 stride-1 convs — the pointwise kernel.
+    Three tunable classes, all covering stride 1 *and* 2 (every kernel
+    family downsamples in-kernel, so strided backbone sites — the ResNet
+    7x7/2 stem, stage-entry 3x3/2s, 1x1/2 projection shortcuts, MobileNet's
+    strided depthwise layers — stay under the tuner):
+      * dense spatial convs — the paper's five contenders at stride 1,
+        the strided ilpm/direct variants at stride 2;
+      * depthwise convs (groups == c, k = M·c for multiplier M >= 1);
+      * dense 1x1 convs — the pointwise kernel (in-kernel subsample at
+        stride 2).
 
-    Everything else (strided dense convs like the ResNet stem, grouped
-    non-depthwise convs) runs on the XLA reference path; spatial sites
-    among them still get a plan entry with an ``xla`` Choice.
+    Everything else (grouped non-depthwise convs, strides > 2) runs on the
+    XLA reference path; such sites still get a plan entry with an ``xla``
+    Choice.
     """
     if spec.depthwise:
         return spec.stride in (1, 2)
     if spec.groups != 1:
         return False  # general grouped conv: no kernel family yet
     if spec.r == 1 and spec.s == 1:
-        return spec.stride == 1
-    return spec.stride == 1 and spec.r > 1 and spec.s > 1
+        return spec.stride in (1, 2)
+    return spec.stride in (1, 2) and spec.r > 1 and spec.s > 1
 
 
 def xla_choice(spec: ConvSpec, *, peak_flops=PEAK_FLOPS,
-               hbm_bw=HBM_BW) -> Choice:
-    """Roofline estimate for the XLA escape-hatch path (untiled model)."""
-    t = max(spec.flops / peak_flops, spec.bytes_min / hbm_bw)
-    return Choice("xla", (), t, spec.bytes_min, spec.flops, 0)
+               hbm_bw=HBM_BW, epilogue=False) -> Choice:
+    """Roofline estimate for the XLA escape-hatch path (untiled model).
+
+    With ``epilogue=True`` the site wants a scale/bias/act applied; the
+    escape hatch runs it as a separate XLA pass, so it pays an extra
+    read+write of the output that the fused kernels do not.
+    """
+    bts = spec.bytes_min + (spec.epilogue_bytes if epilogue else 0)
+    t = max(spec.flops / peak_flops, bts / hbm_bw)
+    return Choice("xla", (), t, bts, spec.flops, 0)
 
 
-def _candidates(spec: ConvSpec):
-    """Enumerate (algorithm, params, hbm_bytes, flops, vmem_working_set)."""
+def _candidates(spec: ConvSpec, epilogue=False):
+    """Enumerate (algorithm, params, hbm_bytes, flops, vmem_working_set).
+
+    Strided specs (stride 2) enumerate only the families whose kernels
+    downsample in-kernel: ilpm/direct for spatial, pointwise for 1x1,
+    depthwise for grouped. ``epilogue=True`` adds the fused scale/bias
+    loads (2·K elements — noise, but kept honest) to every candidate; the
+    *unfused* penalty is charged to `xla_choice`, not here, since every
+    kernel family fuses in-kernel.
+    """
     el = _el(spec)
     B, H, W, C, K, R, S = (spec.batch, spec.out_h, spec.out_w, spec.c,
                            spec.k, spec.r, spec.s)
+    stride = spec.stride
     out = B * H * W * K * el
+    ep = 2 * K * el if epilogue else 0  # fused scale+bias vector loads
     P = H * W
     cands = []
 
     # --- depthwise: channel-slab grid, image/filter/output cut together ---
     if spec.depthwise:
-        hp = (H - 1) * spec.stride + R
-        wp = (W - 1) * spec.stride + S
+        m = spec.channel_multiplier
+        hp = (H - 1) * stride + R
+        wp = (W - 1) * stride + S
         img = B * hp * wp * C * el
-        filt = R * S * C * el
+        filt = R * S * K * el
         for tc in (128, 256, 512):
-            tc = min(tc, C)
-            vmem = hp * wp * tc * el + R * S * tc * el + P * tc * 4
-            cands.append(("depthwise", (("block_c", tc),), img + filt + out,
-                          spec.flops, vmem))
-            if tc == C:
+            tc = min(tc, K)
+            vmem = hp * wp * -(-tc // m) * el + R * S * tc * el + P * tc * 4
+            cands.append(("depthwise", (("block_c", tc),),
+                          img + filt + out + ep, spec.flops, vmem))
+            if tc == K:
                 break
         return cands
-
-    img = B * (H + R - 1) * (W + S - 1) * C * el
-    filt = R * S * C * K * el
 
     # --- pointwise (1x1): image resident; K-tiled grid, single tap ---
     if R == 1 and S == 1:
+        img = B * spec.h * spec.w * C * el  # full image even when strided
+        filt = C * K * el
         for tk in (128, 256, 512):
             tk = min(tk, K)
             vmem = (img // max(B, 1)) + C * tk * el + P * tk * 4
-            cands.append(("pointwise", (("block_k", tk),), img + filt + out,
-                          spec.flops, vmem))
+            cands.append(("pointwise", (("block_k", tk),),
+                          img + filt + out + ep, spec.flops, vmem))
             if tk == K:
                 break
         return cands
+
+    hp = (H - 1) * stride + R
+    wp = (W - 1) * stride + S
+    img = B * hp * wp * C * el
+    filt = R * S * C * K * el
 
     # --- ilpm: image resident; filters streamed once; K-tiled grid ---
     for tk in (128, 256, 512):
         tk = min(tk, K)
         vmem = (img // max(B, 1)) + R * S * C * tk * el + P * tk * 4
-        cands.append(("ilpm", (("block_k", tk),), img + filt + out,
+        cands.append(("ilpm", (("block_k", tk),), img + filt + out + ep,
                       spec.flops, vmem))
         if tk == K:
             break
@@ -139,17 +163,26 @@ def _candidates(spec: ConvSpec):
     # --- direct: filters resident; image row-bands streamed ---
     for th in (4, 8, 16):
         th = min(th, H)
-        band = B * -(-H // th) * (th + R - 1) * (W + S - 1) * C * el
-        vmem = (th + R - 1) * (W + S - 1) * C * el + filt + th * W * K * 4
-        cands.append(("direct", (("block_h", th),), band + filt + out,
+        bh = (th - 1) * stride + R
+        band = B * -(-H // th) * bh * wp * C * el
+        vmem = bh * wp * C * el + filt + th * W * K * 4
+        cands.append(("direct", (("block_h", th),), band + filt + out + ep,
                       spec.flops, vmem))
         if th == H:
             break
 
-    # --- im2col: patch matrix round-trips HBM (the paper's 14.6x enemy) ---
+    if stride != 1:
+        # im2col / libdnn / winograd have no strided kernels
+        return cands
+
+    # --- im2col: patch matrix round-trips HBM (the paper's 14.6x enemy);
+    # its two-phase structure can't fuse the epilogue either, so it pays
+    # the full unfused output round-trip, not the ~free vector loads ---
     patches = B * P * R * S * C * el
+    ep_im2col = spec.epilogue_bytes if epilogue else 0
     vmem = min(P, 256) * R * S * C * el + R * S * C * 128 * el + 256 * 128 * 4
-    cands.append(("im2col", (), img + patches + patches + filt + out,
+    cands.append(("im2col", (),
+                  img + patches + patches + filt + out + ep_im2col,
                   spec.flops, vmem))
 
     # --- libdnn: fused; unroll redone per K tile (index-math overhead) ---
@@ -158,17 +191,17 @@ def _candidates(spec: ConvSpec):
         vmem = (img // max(B, 1)) + P * R * S * C * el // max(
             -(-K // tk), 1) + R * S * C * tk * el + P * tk * 4
         # model the redundant unroll as extra VMEM->VMEM work: ~10% flop tax
-        cands.append(("libdnn", (("block_k", tk),), img + filt + out,
+        cands.append(("libdnn", (("block_k", tk),), img + filt + out + ep,
                       int(spec.flops * 1.10), vmem))
         if tk == K:
             break
 
     # --- winograd F(2,3): 2.25x fewer MACs, 4x transform traffic ---
-    if (R, S) == (3, 3) and spec.stride == 1 and H % 2 == 0 and W % 2 == 0:
+    if (R, S) == (3, 3) and H % 2 == 0 and W % 2 == 0:
         v_bytes = B * 16 * (H // 2) * (W // 2) * C * el
         m_bytes = B * 16 * (H // 2) * (W // 2) * K * el
         traffic = img + v_bytes + v_bytes + 16 * C * K * el + m_bytes \
-            + m_bytes + out
+            + m_bytes + out + ep
         flops = 2 * B * 16 * (H // 2) * (W // 2) * C * K  # the 16 GEMMs
         vmem = (img // max(B, 1)) + 16 * C * K * el \
             + min((H // 2) * (W // 2), 512) * (C + K) * el
@@ -177,12 +210,18 @@ def _candidates(spec: ConvSpec):
 
 
 def cost_model_select(spec: ConvSpec, *, peak_flops=PEAK_FLOPS, hbm_bw=HBM_BW,
-                      vmem_bytes=VMEM_BYTES) -> Choice:
-    """Roofline-model pick; peak/bw overridable to tune for other devices."""
+                      vmem_bytes=VMEM_BYTES, epilogue=False) -> Choice:
+    """Roofline-model pick; peak/bw overridable to tune for other devices.
+
+    ``epilogue=True`` costs the fused conv+BN+act variants: free for the
+    kernel families (in-kernel epilogue), an extra output round-trip for
+    the XLA escape hatch.
+    """
     if not tunable(spec):
-        return xla_choice(spec, peak_flops=peak_flops, hbm_bw=hbm_bw)
+        return xla_choice(spec, peak_flops=peak_flops, hbm_bw=hbm_bw,
+                          epilogue=epilogue)
     best = None
-    for algo, params, bts, flops, vmem in _candidates(spec):
+    for algo, params, bts, flops, vmem in _candidates(spec, epilogue):
         if vmem > vmem_bytes:
             continue
         t = max(flops / peak_flops, bts / hbm_bw)
@@ -215,7 +254,7 @@ def _synth_inputs(spec: ConvSpec):
 
 
 def measured_select(spec: ConvSpec, x=None, w=None, *, repeats=3,
-                    noise_floor=0.5) -> Choice:
+                    noise_floor=0.5, epilogue=False) -> Choice:
     """Wall-clock tuning (the paper's procedure; interpret-mode here).
 
     ``x`` is the pre-padded input; synthesized from the spec when omitted.
@@ -237,13 +276,13 @@ def measured_select(spec: ConvSpec, x=None, w=None, *, repeats=3,
     from repro.kernels import ops
 
     if not tunable(spec):
-        return xla_choice(spec)
+        return xla_choice(spec, epilogue=epilogue)
     if x is None or w is None:
         x, w = _synth_inputs(spec)
 
     best = None
     timed: dict[tuple, float] = {}
-    for algo, params, bts, flops, vmem in _candidates(spec):
+    for algo, params, bts, flops, vmem in _candidates(spec, epilogue):
         if vmem > VMEM_BYTES:
             continue
         try:
@@ -265,7 +304,7 @@ def measured_select(spec: ConvSpec, x=None, w=None, *, repeats=3,
             best = Choice(algo, params, t, bts, flops, vmem)
     assert best is not None, f"every candidate failed for {spec}"
 
-    model = cost_model_select(spec)
+    model = cost_model_select(spec, epilogue=epilogue)
     t_model = timed.get((model.algorithm, model.params))
     if t_model is not None and t_model <= best.est_time * (1 + noise_floor):
         return Choice(model.algorithm, model.params, t_model,
@@ -279,22 +318,23 @@ MODES = ("cost_model", "measured")
 
 
 def select(spec: ConvSpec, mode: str = "cost_model", *, repeats=3,
-           noise_floor=0.5) -> Choice:
+           noise_floor=0.5, epilogue=False) -> Choice:
     """Memoized selection — tune once, reuse per network.
 
     The cache key carries the measurement settings, so e.g. a careful
     ``repeats=10, noise_floor=0`` re-tune is not served a stale quick
-    result.
+    result; ``epilogue`` keys too, since it shifts the cost model.
     """
     assert mode in MODES, f"unknown tuning mode {mode!r}; want one of {MODES}"
-    key = (spec, mode) if mode == "cost_model" \
-        else (spec, mode, repeats, noise_floor)
+    key = (spec, mode, epilogue) if mode == "cost_model" \
+        else (spec, mode, repeats, noise_floor, epilogue)
     if key not in _CACHE:
         if mode == "measured":
             _CACHE[key] = measured_select(spec, repeats=repeats,
-                                          noise_floor=noise_floor)
+                                          noise_floor=noise_floor,
+                                          epilogue=epilogue)
         else:
-            _CACHE[key] = cost_model_select(spec)
+            _CACHE[key] = cost_model_select(spec, epilogue=epilogue)
     return _CACHE[key]
 
 
@@ -348,7 +388,7 @@ class TuningPlan:
 
 
 def build_plan(named_specs, mode: str = "cost_model", *, repeats=3,
-               noise_floor=0.5) -> TuningPlan:
+               noise_floor=0.5, epilogue=False) -> TuningPlan:
     """Tune every (name, ConvSpec) pair into a TuningPlan.
 
     ``named_specs`` is any iterable of ``(layer_name, ConvSpec)`` — the
@@ -356,14 +396,17 @@ def build_plan(named_specs, mode: str = "cost_model", *, repeats=3,
     through ``select``, so results come from (and populate) the module's
     mode-keyed memo cache: tuning N layers that share a shape costs one
     tuning run, and repeated ``build_plan`` calls in one process are free.
-    Non-tunable sites (strided dense convs, grouped non-depthwise) still
+    Non-tunable sites (grouped non-depthwise convs, strides > 2) still
     get a plan entry with an ``xla`` Choice — the plan covers *every*
     enumerated site, and deployment falls back per-site, never wholesale.
-    ``repeats``/``noise_floor`` only matter for ``mode="measured"``.
+    ``repeats``/``noise_floor`` only matter for ``mode="measured"``;
+    ``epilogue=True`` costs each site as the fused conv+BN+act variant
+    (what the model forwards actually run — the engine tunes this way).
     """
     plan = TuningPlan(mode=mode)
     for name, spec in named_specs:
         plan.specs[name] = spec
         plan.choices[name] = select(spec, mode=mode, repeats=repeats,
-                                    noise_floor=noise_floor)
+                                    noise_floor=noise_floor,
+                                    epilogue=epilogue)
     return plan

@@ -28,7 +28,16 @@ class ConvSpec:
 
     @property
     def depthwise(self) -> bool:
-        return self.groups > 1 and self.groups == self.c == self.k
+        """One filter column per input channel: groups == c, k = M·c for an
+        integer channel multiplier M >= 1 (lax HWIO convention)."""
+        return self.groups > 1 and self.groups == self.c \
+            and self.k % self.c == 0
+
+    @property
+    def channel_multiplier(self) -> int:
+        """Output channels per input channel of a depthwise conv (M)."""
+        assert self.depthwise, self
+        return self.k // self.c
 
     @property
     def out_h(self):
@@ -52,6 +61,15 @@ class ConvSpec:
         return el * (self.batch * self.h * self.w * self.c
                      + self.r * self.s * self.c_per_group * self.k
                      + self.batch * self.out_h * self.out_w * self.k)
+
+    @property
+    def epilogue_bytes(self) -> int:
+        """Extra HBM traffic an *unfused* scale/bias/act pass costs: one
+        read + one write of the conv output. Fused kernels pay ~none (the
+        (k,) scale/bias vectors are noise); the cost model charges this to
+        the XLA escape hatch when the call site wants an epilogue."""
+        el = 2 if "16" in self.dtype else 4
+        return 2 * el * self.batch * self.out_h * self.out_w * self.k
 
     @classmethod
     def from_tensors(cls, x, w, stride):

@@ -4,14 +4,19 @@ Wraps a CNN (ResNet or a MobileNet-style net) with the paper's
 tune-once/run-many flow (§2.3):
 
   1. the model module's ``conv_specs`` enumerates the ConvSpec of every
-     planned conv site in the network — for ResNet the stem and every 3x3
-     (1x1s ride the XLA matmul path); for MobileNet the stem plus every
-     depthwise and pointwise site, strided depthwise included;
+     conv site in the network — for ResNet the 7x7/2 stem, every 3x3
+     (strided stage entries included) and every 1x1 (bottleneck
+     reduce/expand, projection shortcuts); for MobileNet the stem plus
+     every depthwise and pointwise site, strided depthwise included;
   2. the autotuner turns that list into a ``TuningPlan`` (cost-model or
      measured mode) mapping each layer name to its tuned Choice —
-     algorithm plus kernel parameters;
+     algorithm plus kernel parameters — costed as the fused conv+BN+act
+     variant the forwards actually dispatch;
   3. the plan is threaded into the model's ``forward`` and jitted, so the
-     compiled forward dispatches each layer to its own tuned kernel;
+     compiled forward dispatches each layer to its own tuned kernel with
+     its folded-BN/activation epilogue fused into the kernel; Winograd
+     sites get their filter transform ``U = G g Gᵀ`` computed once here
+     and cached for every subsequent forward;
   4. plans serialize to JSON (``save_plan`` / ``TuningPlan.load``) so a
      device tunes once offline and deployments just load the plan.
 
@@ -69,9 +74,14 @@ class InferenceEngine:
             plan = self.tune(mode=tune_mode)
         self.plan = plan
         self.reports = self._reports_from_plan(plan) if plan else []
+        # Winograd filter transforms U = G g G^T are constant at inference
+        # (weights frozen): compute each winograd site's U once now, not
+        # per forward, and thread the cache into the jitted forward.
+        self.winograd_u = self._winograd_cache(plan) if plan else {}
         self._fwd = jax.jit(functools.partial(
             self._model.forward, cfg=cfg, algorithm=algorithm,
-            plan=plan.choices if plan is not None else None))
+            plan=plan.choices if plan is not None else None,
+            winograd_u=self.winograd_u or None))
 
     # ------------------------------------------------------------------
     # plan construction
@@ -90,10 +100,35 @@ class InferenceEngine:
 
         ``tune_kwargs`` reach the tuner: ``repeats`` and ``noise_floor``
         for measured mode (on real hardware use ``noise_floor=0`` for
-        pure wall-clock selection).
+        pure wall-clock selection). Sites are costed as their fused
+        conv+BN+act variants (``epilogue=True``) because that is what the
+        model forwards dispatch.
         """
         return autotune.build_plan(self._conv_specs(), mode=mode,
-                                   **tune_kwargs)
+                                   epilogue=True, **tune_kwargs)
+
+    def _site_params(self, name: str):
+        """Resolve a plan layer name ('s0b1.c2') to its param subtree."""
+        p = self.params
+        for part in name.split("."):
+            p = p[part]
+        return p
+
+    def _winograd_cache(self, plan: TuningPlan) -> dict:
+        """U = G g G^T per winograd-planned site, computed once per build
+        (the paper's §5.2 'filter transform is free at inference')."""
+        from repro.kernels import ref as _ref
+
+        cache = {}
+        for name, ch in plan.choices.items():
+            if ch.algorithm != "winograd":
+                continue
+            try:
+                w = self._site_params(name)["w"]
+            except (KeyError, TypeError):
+                continue  # plan site not in this param tree: skip
+            cache[name] = _ref.winograd_filter_transform(w)
+        return cache
 
     def _validate_plan(self, plan: TuningPlan) -> None:
         """A deployed plan must match this network's conv geometry."""
@@ -134,7 +169,6 @@ class InferenceEngine:
     def traffic_report(self):
         """Per-layer bytes/flops for every planned conv site — the energy
         proxy (DESIGN.md §7.5). Coverage follows the model module's
-        ``conv_specs``: ResNet plans the stem and 3x3s (its 1x1s ride the
-        unplanned XLA matmul path); MobileNet plans every depthwise *and*
-        pointwise site."""
+        ``conv_specs``: every backbone conv site (stem, strided entries,
+        1x1s, depthwise/pointwise) has an entry."""
         return self.reports

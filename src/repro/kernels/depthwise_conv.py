@@ -16,7 +16,11 @@ C-contraction to feed the MXU. The ILP-M blocking transfers directly:
     — the paper's `workgroup_size : 1` ratio, elementwise instead of MXU.
 
 Stride 1 and 2 both run in-kernel (MobileNet downsamples inside its
-depthwise layers), unlike the dense kernels where stride-2 falls to XLA.
+depthwise layers). Channel multipliers > 1 are supported with lax's HWIO
+convention — filters (R, S, 1, M·C), output channel k reading input channel
+k // M — by repeating the input slab M× on lanes inside the kernel. An
+optional (scale, bias, act) epilogue folds BN + ReLU6 into the output
+write, same contract as the dense kernels.
 """
 from __future__ import annotations
 
@@ -26,49 +30,71 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.fusion import epilogue_operands
+from repro.kernels.ref import apply_act
 
-def _kernel(x_ref, w_ref, o_ref, *, H, W, R, S, stride):
+
+def _kernel(x_ref, w_ref, *refs, H, W, R, S, stride, mult, act, fused):
     """x_ref: (1, Hp, Wp, TC) padded image channel slab, VMEM-pinned.
-    w_ref: (R, S, 1, TC) — the slab's per-channel filter taps.
-    o_ref: (1, H, W, TC).
+    w_ref: (R, S, 1, TK) — the slab's per-channel filter taps (TK = M·TC).
+    refs: optional (scale, bias) (1, TK) slabs, then o_ref (1, H, W, TK).
     """
+    o_ref = refs[-1]
     x = x_ref[0]
-    TC = x.shape[-1]
-    acc = jnp.zeros((H, W, TC), jnp.float32)
+    TK = w_ref.shape[-1]
+    acc = jnp.zeros((H, W, TK), jnp.float32)
     for r in range(R):          # static taps — fully unrolled, VPU-pipelined
         for s in range(S):
             xs = x[r:r + (H - 1) * stride + 1:stride,
                    s:s + (W - 1) * stride + 1:stride, :]
+            if mult > 1:        # channel k convolves input channel k // M
+                xs = jnp.repeat(xs, mult, axis=-1)
             acc += xs.astype(jnp.float32) * w_ref[r, s, 0].astype(jnp.float32)
+    if fused:
+        acc = acc * refs[0][0] + refs[1][0]
+    acc = apply_act(acc, act)
     o_ref[0] = acc.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "block_c", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("stride", "block_c", "act", "interpret"))
 def depthwise_conv(x_padded, w, *, stride: int = 1, block_c: int = 128,
-                   interpret: bool = False):
-    """x_padded: (B, Hp, Wp, C) pre-padded; w: (R, S, 1, C) -> (B, H, W, C).
+                   scale=None, bias=None, act=None, interpret: bool = False):
+    """x_padded: (B, Hp, Wp, C) pre-padded; w: (R, S, 1, M·C)
+    -> (B, H, W, M·C).
 
-    ``block_c`` tiles the channel axis (the tuned kernel parameter); the
-    grid is (batch, channel blocks) and every operand of one grid step is
-    the same channel slab, so VMEM holds image + filters + output for
-    `block_c` lanes at once.
+    ``block_c`` tiles the *output*-channel axis (the tuned kernel
+    parameter); the grid is (batch, channel blocks) and every operand of
+    one grid step is the same channel slab — for multiplier M the image
+    slab carries ``block_c // M`` input channels feeding ``block_c``
+    output lanes.
     """
     B, Hp, Wp, C = x_padded.shape
     R, S, cg, K = w.shape
-    assert cg == 1 and K == C, (
-        f"depthwise kernel wants (R,S,1,C) filters for C={C}, got {w.shape}")
+    assert cg == 1 and K % C == 0, (
+        f"depthwise kernel wants (R,S,1,M*C) filters for C={C}, got {w.shape}")
+    mult = K // C
     H = (Hp - R) // stride + 1
     W = (Wp - S) // stride + 1
-    tc = min(block_c, C)
-    grid = (B, pl.cdiv(C, tc))
+    tk = min(block_c, K)
+    tk = max(mult, tk - tk % mult)  # output slab must hold whole input lanes
+    tc = tk // mult
+    grid = (B, pl.cdiv(K, tk))
+    operands = [x_padded, w]
+    in_specs = [
+        pl.BlockSpec((1, Hp, Wp, tc), lambda b, c: (b, 0, 0, c)),
+        pl.BlockSpec((R, S, 1, tk), lambda b, c: (0, 0, 0, c)),
+    ]
+    fused, extra, extra_specs = epilogue_operands(
+        scale, bias, K, tk, lambda b, c: (0, c))
+    operands += extra
+    in_specs += extra_specs
     return pl.pallas_call(
-        functools.partial(_kernel, H=H, W=W, R=R, S=S, stride=stride),
+        functools.partial(_kernel, H=H, W=W, R=R, S=S, stride=stride,
+                          mult=mult, act=act, fused=fused),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, Hp, Wp, tc), lambda b, c: (b, 0, 0, c)),
-            pl.BlockSpec((R, S, 1, tc), lambda b, c: (0, 0, 0, c)),
-        ],
-        out_specs=pl.BlockSpec((1, H, W, tc), lambda b, c: (b, 0, 0, c)),
-        out_shape=jax.ShapeDtypeStruct((B, H, W, C), x_padded.dtype),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, H, W, tk), lambda b, c: (b, 0, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((B, H, W, K), x_padded.dtype),
         interpret=interpret,
-    )(x_padded, w)
+    )(*operands)

@@ -8,6 +8,10 @@ shared-memory barrier per input channel; on TPU the analogous cost is VMEM
 pressure — the filter residency is R·S·C·K (2.4 MB at conv4.x, 9.4 MB at
 conv5.x) versus ILP-M's image residency (≤0.9 MB), which is what caps the
 achievable pixel-tile depth. The benchmarks expose this in the VMEM columns.
+
+Stride ∈ {1, 2} runs in-kernel (strided tap slices over each row band), and
+an optional (scale, bias, act) epilogue folds BN + activation into the
+output write — same contract as `ilpm_conv`.
 """
 from __future__ import annotations
 
@@ -17,56 +21,80 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.fusion import epilogue_operands
+from repro.kernels.ref import apply_act
 
-def _kernel(x_ref, w_ref, o_ref, *, TH, W, R, S):
-    """x_ref: (1, 1, TH+R-1, W+S-1, C) pixel row-band; w_ref: full
-    (R,S,C,K); o_ref: (1, 1, TH, W, K)."""
+
+def _kernel(x_ref, w_ref, *refs, TH, W, R, S, stride, act, fused):
+    """x_ref: (1, 1, (TH-1)*stride+R, Wp, C) pixel row-band; w_ref: full
+    (R,S,C,K); refs: optional (scale, bias) (1, K), then o_ref
+    (1, 1, TH, W, K)."""
+    o_ref = refs[-1]
     C = x_ref.shape[-1]
     K = w_ref.shape[-1]
     acc = jnp.zeros((TH * W, K), jnp.float32)
     for r in range(R):
         for s in range(S):
-            xs = x_ref[0, 0, r:r + TH, s:s + W, :].reshape(TH * W, C)
+            xs = x_ref[0, 0, r:r + (TH - 1) * stride + 1:stride,
+                       s:s + (W - 1) * stride + 1:stride, :].reshape(
+                           TH * W, C)
             acc += jnp.dot(xs, w_ref[r, s],
                            preferred_element_type=jnp.float32)
+    if fused:
+        acc = acc * refs[0][0] + refs[1][0]
+    acc = apply_act(acc, act)
     o_ref[0, 0] = acc.reshape(TH, W, K).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_h", "interpret"))
-def direct_conv(x_padded, w, *, block_h: int = 8, interpret: bool = False):
-    """x_padded: (B, H+R-1, W+S-1, C); w: (R,S,C,K) -> (B,H,W,K).
+@functools.partial(jax.jit,
+                   static_argnames=("stride", "block_h", "act", "interpret"))
+def direct_conv(x_padded, w, *, stride: int = 1, block_h: int = 8,
+                scale=None, bias=None, act=None, interpret: bool = False):
+    """x_padded: (B, (H-1)*stride+R, (W-1)*stride+S, C); w: (R,S,C,K)
+    -> (B,H,W,K).
 
-    Row-band pixel tiles of `block_h` rows; bands overlap by the R-1 halo,
-    expressed as an element-offset index map on a (TH+R-1)-row block.
+    Row-band pixel tiles of `block_h` output rows; bands overlap by the
+    filter halo, expressed by pre-slicing x into overlapping bands outside
+    the kernel (block starts must be multiples of the block shape in
+    Pallas's Blocked mode).
     """
     B, Hp, Wp, C = x_padded.shape
     R, S, _, K = w.shape
-    H, W = Hp - R + 1, Wp - S + 1
+    H = (Hp - R) // stride + 1
+    W = (Wp - S) // stride + 1
     th = min(block_h, H)
     nh = pl.cdiv(H, th)
     grid = (B, nh)
 
-    # Halo trick: pass a band of th+R-1 rows starting at row th*i. Block
-    # starts must be multiples of the block shape in Pallas's Blocked mode,
-    # so instead we pre-slice x into overlapping bands outside the kernel.
+    # Halo trick: band i serves output rows [th*i, th*i+th) and needs input
+    # rows starting at th*i*stride, (th-1)*stride + R of them. The last
+    # band is clamped to end exactly at output row H.
+    bh = (th - 1) * stride + R
     bands = []
     for i in range(nh):
-        lo = min(th * i, Hp - (th + R - 1))
-        bands.append(jax.lax.dynamic_slice_in_dim(x_padded, lo, th + R - 1, 1))
-    xb = jnp.stack(bands, axis=1)  # (B, nh, th+R-1, Wp, C)
+        lo = min(th * i, H - th) * stride
+        bands.append(jax.lax.dynamic_slice_in_dim(x_padded, lo, bh, 1))
+    xb = jnp.stack(bands, axis=1)  # (B, nh, bh, Wp, C)
 
+    operands = [xb, w]
+    in_specs = [
+        pl.BlockSpec((1, 1, bh, Wp, C), lambda b, i: (b, i, 0, 0, 0)),
+        # filter bank resident: index map ignores the pixel axis
+        pl.BlockSpec((R, S, C, K), lambda b, i: (0, 0, 0, 0)),
+    ]
+    fused, extra, extra_specs = epilogue_operands(
+        scale, bias, K, K, lambda b, i: (0, 0))  # filter-resident: full K
+    operands += extra
+    in_specs += extra_specs
     out = pl.pallas_call(
-        functools.partial(_kernel, TH=th, W=W, R=R, S=S),
+        functools.partial(_kernel, TH=th, W=W, R=R, S=S, stride=stride,
+                          act=act, fused=fused),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, th + R - 1, Wp, C), lambda b, i: (b, i, 0, 0, 0)),
-            # filter bank resident: index map ignores the pixel axis
-            pl.BlockSpec((R, S, C, K), lambda b, i: (0, 0, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, th, W, K), lambda b, i: (b, i, 0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B, nh, th, W, K), x_padded.dtype),
         interpret=interpret,
-    )(xb, w)
+    )(*operands)
     if nh * th == H:
         return out.reshape(B, H, W, K)
     # last band was clamped to start at H-th: drop its duplicated head rows

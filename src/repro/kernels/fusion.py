@@ -1,0 +1,33 @@
+"""Shared constructor for the kernels' fused-epilogue operands.
+
+Every conv kernel that fuses the (scale, bias) folded-BN epilogue into its
+output write appends the same operand tail to its ``pallas_call``: the two
+(K,) vectors as (1, K) fp32 rows, block-sliced with the same K-slab index
+map as the kernel's filter operand. This helper builds that tail once so
+the contract can't drift between kernels.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def epilogue_operands(scale, bias, k, block, index_map):
+    """-> (fused, extra_operands, extra_in_specs) for a pallas_call.
+
+    When either of ``scale``/``bias`` is present both are materialized
+    (ones/zeros default for the missing one) as (1, k) fp32 rows with a
+    ``(1, block)`` BlockSpec indexed by ``index_map``; the kernel body
+    reads them as ``refs[0][0]`` / ``refs[1][0]`` ((block,) vectors that
+    broadcast over its accumulator). When neither is present the tail is
+    empty and the kernel skips the epilogue multiply-add entirely.
+    """
+    fused = scale is not None or bias is not None
+    if not fused:
+        return False, [], []
+    sc = jnp.ones(k, jnp.float32) if scale is None \
+        else scale.astype(jnp.float32)
+    bi = jnp.zeros(k, jnp.float32) if bias is None \
+        else bias.astype(jnp.float32)
+    spec = pl.BlockSpec((1, block), index_map)
+    return True, [sc.reshape(1, k), bi.reshape(1, k)], [spec, spec]

@@ -41,12 +41,22 @@ def im2col_unroll(x_padded, *, r, s, interpret=False):
     )(x_padded)
 
 
-def im2col_conv(x_padded, w, *, interpret=False):
-    """Two-phase im2col: unroll kernel -> HBM -> GEMM kernel."""
+def im2col_conv(x_padded, w, *, scale=None, bias=None, act=None,
+                interpret=False):
+    """Two-phase im2col: unroll kernel -> HBM -> GEMM kernel.
+
+    The (scale, bias, act) epilogue is applied as a separate pass after the
+    GEMM — the two-phase structure has no single output-writing kernel to
+    fold it into, which is part of why the cost model charges im2col extra
+    traffic relative to the fused families.
+    """
+    from repro.kernels.ref import apply_epilogue
+
     B, Hp, Wp, C = x_padded.shape
     R, S, _, K = w.shape
     H, W = Hp - R + 1, Wp - S + 1
     patches = im2col_unroll(x_padded, r=R, s=S, interpret=interpret)
     out = jax.vmap(lambda p: gemm(p, w.reshape(R * S * C, K),
                                   interpret=interpret))(patches)
-    return out.reshape(B, H, W, K)
+    return apply_epilogue(out.reshape(B, H, W, K), scale=scale, bias=bias,
+                          act=act)

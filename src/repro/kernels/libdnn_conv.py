@@ -16,8 +16,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(x_ref, w_ref, o_ref, *, H, W, R, S):
-    """x_ref: (1, Hp, Wp, C); w_ref: (R*S*C, TK); o_ref: (1, H*W, TK)."""
+from repro.kernels.fusion import epilogue_operands
+from repro.kernels.ref import apply_act
+
+
+def _kernel(x_ref, w_ref, *refs, H, W, R, S, act, fused):
+    """x_ref: (1, Hp, Wp, C); w_ref: (R*S*C, TK); refs: optional
+    (scale, bias) (1, TK) slabs, then o_ref (1, H*W, TK)."""
+    o_ref = refs[-1]
     C = x_ref.shape[-1]
     # fused unroll: build the patch tile in VMEM registers...
     cols = []
@@ -26,27 +32,37 @@ def _kernel(x_ref, w_ref, o_ref, *, H, W, R, S):
             cols.append(x_ref[0, r:r + H, s:s + W, :].reshape(H * W, C))
     patch = jnp.concatenate(cols, axis=-1)          # (H*W, R*S*C)
     # ...then contract immediately (never leaves the chip)
-    o_ref[0] = jnp.dot(patch, w_ref[...],
-                       preferred_element_type=jnp.float32).astype(o_ref.dtype)
+    acc = jnp.dot(patch, w_ref[...], preferred_element_type=jnp.float32)
+    if fused:
+        acc = acc * refs[0][0] + refs[1][0]
+    acc = apply_act(acc, act)
+    o_ref[0] = acc.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
-def libdnn_conv(x_padded, w, *, block_k: int = 128, interpret: bool = False):
+@functools.partial(jax.jit, static_argnames=("block_k", "act", "interpret"))
+def libdnn_conv(x_padded, w, *, block_k: int = 128, scale=None, bias=None,
+                act=None, interpret: bool = False):
     """x_padded: (B,Hp,Wp,C); w: (R,S,C,K) -> (B,H,W,K)."""
     B, Hp, Wp, C = x_padded.shape
     R, S, _, K = w.shape
     H, W = Hp - R + 1, Wp - S + 1
     tk = min(block_k, K)
     wf = w.reshape(R * S * C, K)
+    operands = [x_padded, wf]
+    in_specs = [
+        pl.BlockSpec((1, Hp, Wp, C), lambda b, k: (b, 0, 0, 0)),
+        pl.BlockSpec((R * S * C, tk), lambda b, k: (0, k)),
+    ]
+    fused, extra, extra_specs = epilogue_operands(
+        scale, bias, K, tk, lambda b, k: (0, k))
+    operands += extra
+    in_specs += extra_specs
     out = pl.pallas_call(
-        functools.partial(_kernel, H=H, W=W, R=R, S=S),
+        functools.partial(_kernel, H=H, W=W, R=R, S=S, act=act, fused=fused),
         grid=(B, pl.cdiv(K, tk)),
-        in_specs=[
-            pl.BlockSpec((1, Hp, Wp, C), lambda b, k: (b, 0, 0, 0)),
-            pl.BlockSpec((R * S * C, tk), lambda b, k: (0, k)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, H * W, tk), lambda b, k: (b, 0, k)),
         out_shape=jax.ShapeDtypeStruct((B, H * W, K), x_padded.dtype),
         interpret=interpret,
-    )(x_padded, wf)
+    )(*operands)
     return out.reshape(B, H, W, K)

@@ -38,58 +38,92 @@ def _interp() -> bool:
     return not _on_tpu()
 
 
-# ---- the five conv algorithms (stride-1, pre-padded inputs) ----------
+# ---- the conv algorithms (pre-padded inputs) -------------------------
+#
+# Shared epilogue contract: every wrapper takes optional ``scale``/``bias``
+# ((K,) folded-BN vectors) and ``act`` ('relu' | 'relu6' | None). On the
+# pallas path they are fused into the kernel's output write; on the jnp
+# path ``ref.apply_epilogue`` applies the identical math as XLA ops, so the
+# two impls stay numerically interchangeable. ``stride`` is call-site
+# geometry (only the kernels that support it declare it).
 
-def ilpm(x_padded, w, *, impl="auto", block_k=128):
+def ilpm(x_padded, w, *, impl="auto", stride=1, block_k=128, scale=None,
+         bias=None, act=None):
     if _use_pallas(impl):
-        return _il.ilpm_conv(x_padded, w, block_k=block_k, interpret=_interp())
-    return ref.ilpm_conv(x_padded, w)
+        return _il.ilpm_conv(x_padded, w, stride=stride, block_k=block_k,
+                             scale=scale, bias=bias, act=act,
+                             interpret=_interp())
+    return ref.apply_epilogue(ref.ilpm_conv(x_padded, w, stride=stride),
+                              scale=scale, bias=bias, act=act)
 
 
-def direct(x_padded, w, *, impl="auto", block_h=8):
+def direct(x_padded, w, *, impl="auto", stride=1, block_h=8, scale=None,
+           bias=None, act=None):
     if _use_pallas(impl):
-        return _dc.direct_conv(x_padded, w, block_h=block_h, interpret=_interp())
-    return ref.direct_conv(x_padded, w)
+        return _dc.direct_conv(x_padded, w, stride=stride, block_h=block_h,
+                               scale=scale, bias=bias, act=act,
+                               interpret=_interp())
+    return ref.apply_epilogue(ref.direct_conv(x_padded, w, stride=stride),
+                              scale=scale, bias=bias, act=act)
 
 
-def im2col(x_padded, w, *, impl="auto"):
+def im2col(x_padded, w, *, impl="auto", scale=None, bias=None, act=None):
     if _use_pallas(impl):
-        return _im.im2col_conv(x_padded, w, interpret=_interp())
-    return ref.im2col_conv(x_padded, w)
+        return _im.im2col_conv(x_padded, w, scale=scale, bias=bias, act=act,
+                               interpret=_interp())
+    return ref.apply_epilogue(ref.im2col_conv(x_padded, w),
+                              scale=scale, bias=bias, act=act)
 
 
-def libdnn(x_padded, w, *, impl="auto", block_k=128):
+def libdnn(x_padded, w, *, impl="auto", block_k=128, scale=None, bias=None,
+           act=None):
     if _use_pallas(impl):
-        return _lib.libdnn_conv(x_padded, w, block_k=block_k, interpret=_interp())
-    return ref.libdnn_conv(x_padded, w)
+        return _lib.libdnn_conv(x_padded, w, block_k=block_k, scale=scale,
+                                bias=bias, act=act, interpret=_interp())
+    return ref.apply_epilogue(ref.libdnn_conv(x_padded, w),
+                              scale=scale, bias=bias, act=act)
 
 
-def winograd(x_padded, w, *, impl="auto", u=None):
+def winograd(x_padded, w, *, impl="auto", u=None, scale=None, bias=None,
+             act=None):
+    """``u`` is the cached filter transform U = G g Gᵀ (frozen weights:
+    the engine computes it once per plan build)."""
     if _use_pallas(impl):
-        return _wg.winograd_conv(x_padded, w, u=u, interpret=_interp())
-    return ref.winograd_conv(x_padded, w)
+        return _wg.winograd_conv(x_padded, w, u=u, scale=scale, bias=bias,
+                                 act=act, interpret=_interp())
+    return ref.apply_epilogue(ref.winograd_conv(x_padded, w, u=u),
+                              scale=scale, bias=bias, act=act)
 
 
 # ---- the grouped family (MobileNet depthwise/pointwise) --------------
 
-def depthwise(x_padded, w, *, impl="auto", stride=1, block_c=128):
-    """Depthwise conv: x (B,Hp,Wp,C) pre-padded, w (R,S,1,C) -> (B,H,W,C).
+def depthwise(x_padded, w, *, impl="auto", stride=1, block_c=128, scale=None,
+              bias=None, act=None):
+    """Depthwise conv: x (B,Hp,Wp,C) pre-padded, w (R,S,1,M·C)
+    -> (B,H,W,M·C).
 
     ``stride`` is geometry, not a tuned parameter — it comes from the call
     site, while ``block_c`` comes from the tuner. Stride 1 and 2 run
-    in-kernel (MobileNet downsamples inside depthwise layers).
+    in-kernel (MobileNet downsamples inside depthwise layers); channel
+    multipliers M > 1 repeat the input slab on lanes in-kernel.
     """
     if _use_pallas(impl):
         return _dw.depthwise_conv(x_padded, w, stride=stride,
-                                  block_c=block_c, interpret=_interp())
-    return ref.depthwise_conv(x_padded, w, stride=stride)
+                                  block_c=block_c, scale=scale, bias=bias,
+                                  act=act, interpret=_interp())
+    return ref.apply_epilogue(ref.depthwise_conv(x_padded, w, stride=stride),
+                              scale=scale, bias=bias, act=act)
 
 
-def pointwise(x, w, *, impl="auto", block_k=128):
-    """1x1 conv: x (B,H,W,C) *unpadded*, w (1,1,C,K) -> (B,H,W,K)."""
+def pointwise(x, w, *, impl="auto", stride=1, block_k=128, scale=None,
+              bias=None, act=None):
+    """1x1 conv: x (B,H,W,C) *unpadded*, w (1,1,C,K) -> (B,H',W',K)."""
     if _use_pallas(impl):
-        return _pw.pointwise_conv(x, w, block_k=block_k, interpret=_interp())
-    return ref.pointwise_conv(x, w)
+        return _pw.pointwise_conv(x, w, stride=stride, block_k=block_k,
+                                  scale=scale, bias=bias, act=act,
+                                  interpret=_interp())
+    return ref.apply_epilogue(ref.pointwise_conv(x, w, stride=stride),
+                              scale=scale, bias=bias, act=act)
 
 
 ALGORITHMS = {"ilpm": ilpm, "direct": direct, "im2col": im2col,
@@ -131,7 +165,11 @@ def dispatch(algorithm: str, x_padded, w, *, impl="auto", **params):
         (or stub out) entries after import;
       * ``params`` are filtered per-algorithm by ``kernel_params`` — a
         plan tuned for one algorithm stays usable if dispatch falls back
-        to another whose kernel takes different knobs;
+        to another whose kernel takes different knobs. The same filter
+        carries call-site geometry (``stride``), the fused epilogue
+        (``scale``/``bias``/``act`` — every conv wrapper accepts these)
+        and the cached Winograd transform (``u`` — winograd only, dropped
+        elsewhere);
       * ``impl`` selects pallas vs jnp per the module policy above; the
         algorithm itself never changes with ``impl``, only its backend.
 

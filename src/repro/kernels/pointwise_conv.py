@@ -8,7 +8,12 @@ degenerate one-tap case of `ilpm_conv`:
     BlockSpec index map ignores the K axis) — expand/project pairs in
     inverted-residual blocks reread the same activations, so residency is
     where the traffic win is;
-  * one MXU contraction per grid step, no halo and no padding (R=S=1).
+  * one MXU contraction per grid step, no halo and no padding (R=S=1);
+  * stride ∈ {1, 2}: strided 1x1 convs (ResNet projection shortcuts at
+    stage entries) subsample the resident image in-kernel — `x[::2, ::2]`
+    against the pinned tile, no XLA gather pass;
+  * optional fused (scale, bias, act) epilogue in the output write, same
+    contract as `ilpm_conv`.
 
 Kept separate from `ilpm` so the tuner can cost it without tap-loop
 overheads and so dispatch can skip SAME padding entirely.
@@ -21,36 +26,55 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.fusion import epilogue_operands
+from repro.kernels.ref import apply_act
 
-def _kernel(x_ref, w_ref, o_ref, *, H, W):
-    """x_ref: (1, H, W, C) — full image, VMEM-pinned.
+
+def _kernel(x_ref, w_ref, *refs, H, W, stride, act, fused):
+    """x_ref: (1, Hin, Win, C) — full image, VMEM-pinned.
     w_ref: (1, 1, C, TK) — one output-channel slab.
-    o_ref: (1, H, W, TK).
+    refs: optional (scale, bias) (1, TK) slabs, then o_ref (1, H, W, TK).
     """
+    o_ref = refs[-1]
     C = x_ref.shape[-1]
     TK = w_ref.shape[-1]
-    xs = x_ref[0].reshape(H * W, C)
+    xs = x_ref[0, ::stride, ::stride, :].reshape(H * W, C)
     acc = jnp.dot(xs, w_ref[0, 0], preferred_element_type=jnp.float32)
+    if fused:
+        acc = acc * refs[0][0] + refs[1][0]
+    acc = apply_act(acc, act)
     o_ref[0] = acc.reshape(H, W, TK).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
-def pointwise_conv(x, w, *, block_k: int = 128, interpret: bool = False):
-    """x: (B, H, W, C) — no padding needed; w: (1,1,C,K) -> (B, H, W, K)."""
+@functools.partial(jax.jit,
+                   static_argnames=("stride", "block_k", "act", "interpret"))
+def pointwise_conv(x, w, *, stride: int = 1, block_k: int = 128,
+                   scale=None, bias=None, act=None, interpret: bool = False):
+    """x: (B, H, W, C) — no padding needed; w: (1,1,C,K)
+    -> (B, ceil(H/stride), ceil(W/stride), K)."""
     B, H, W, C = x.shape
     R, S, _, K = w.shape
     assert (R, S) == (1, 1), f"pointwise kernel wants 1x1 filters, got {w.shape}"
+    Ho = -(-H // stride)
+    Wo = -(-W // stride)
     tk = min(block_k, K)
     grid = (B, pl.cdiv(K, tk))
+    operands = [x, w]
+    in_specs = [
+        # index map ignores k -> image stays resident across the K row
+        pl.BlockSpec((1, H, W, C), lambda b, k: (b, 0, 0, 0)),
+        pl.BlockSpec((1, 1, C, tk), lambda b, k: (0, 0, 0, k)),
+    ]
+    fused, extra, extra_specs = epilogue_operands(
+        scale, bias, K, tk, lambda b, k: (0, k))
+    operands += extra
+    in_specs += extra_specs
     return pl.pallas_call(
-        functools.partial(_kernel, H=H, W=W),
+        functools.partial(_kernel, H=Ho, W=Wo, stride=stride, act=act,
+                          fused=fused),
         grid=grid,
-        in_specs=[
-            # index map ignores k -> image stays resident across the K row
-            pl.BlockSpec((1, H, W, C), lambda b, k: (b, 0, 0, 0)),
-            pl.BlockSpec((1, 1, C, tk), lambda b, k: (0, 0, 0, k)),
-        ],
-        out_specs=pl.BlockSpec((1, H, W, tk), lambda b, k: (b, 0, 0, k)),
-        out_shape=jax.ShapeDtypeStruct((B, H, W, K), x.dtype),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, Ho, Wo, tk), lambda b, k: (b, 0, 0, k)),
+        out_shape=jax.ShapeDtypeStruct((B, Ho, Wo, K), x.dtype),
         interpret=interpret,
-    )(x, w)
+    )(*operands)

@@ -28,6 +28,38 @@ def conv2d_reference(x, w, *, stride=1, padding="SAME", groups=1):
         feature_group_count=groups)
 
 
+def apply_act(y, act):
+    """Apply a named activation ('relu' | 'relu6' | None).
+
+    Shared by the Pallas kernels' fused epilogues (it is plain jnp, so it
+    traces inside a kernel body) and the jnp reference paths.
+    """
+    if act is None:
+        return y
+    if act == "relu":
+        return jnp.maximum(y, 0)
+    if act == "relu6":
+        return jnp.clip(y, 0.0, 6.0)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def apply_epilogue(y, scale=None, bias=None, act=None):
+    """Unfused conv epilogue: y*scale + bias then activation, in fp32.
+
+    The jnp/XLA counterpart of the kernels' in-kernel epilogue — used by
+    the `impl='jnp'` wrappers and the XLA escape hatch so fused and
+    unfused paths compute the same function.
+    """
+    if scale is None and bias is None and act is None:
+        return y
+    z = y.astype(jnp.float32)
+    if scale is not None:
+        z = z * scale.astype(jnp.float32)
+    if bias is not None:
+        z = z + bias.astype(jnp.float32)
+    return apply_act(z, act).astype(y.dtype)
+
+
 def pad_same(x, r, s, stride=1):
     """Explicit SAME padding so kernels see pre-padded inputs.
 
@@ -45,20 +77,25 @@ def pad_same(x, r, s, stride=1):
 # ILP-M: tap-major accumulation, image resident, K vectorized
 
 
-def ilpm_conv(x_padded, w):
-    """x_padded: (B, H+r-1, W+s-1, C); w: (R,S,C,K) -> (B,H,W,K).
+def ilpm_conv(x_padded, w, *, stride=1):
+    """x_padded: (B, (H-1)*stride+R, (W-1)*stride+S, C); w: (R,S,C,K)
+    -> (B,H,W,K).
 
     The algorithm's structure in jnp: static loop over taps, each tap a
     (pixels, C) @ (C, K) contraction — one weight slab per step amortized
-    over the whole image tile (the paper's workgroup_size:1 ratio).
+    over the whole image tile (the paper's workgroup_size:1 ratio). Strided
+    taps are strided windows of the same resident image.
     """
     R, S, C, K = w.shape
     B, Hp, Wp, _ = x_padded.shape
-    H, W = Hp - R + 1, Wp - S + 1
+    H = (Hp - R) // stride + 1
+    W = (Wp - S) // stride + 1
     acc = jnp.zeros((B, H * W, K), jnp.float32)
     for r in range(R):
         for s in range(S):
-            xs = x_padded[:, r:r + H, s:s + W, :].reshape(B, H * W, C)
+            xs = x_padded[:, r:r + (H - 1) * stride + 1:stride,
+                          s:s + (W - 1) * stride + 1:stride, :].reshape(
+                              B, H * W, C)
             acc = acc + jnp.einsum("bpc,ck->bpk", xs, w[r, s],
                                    preferred_element_type=jnp.float32)
     return acc.reshape(B, H, W, K).astype(x_padded.dtype)
@@ -68,14 +105,16 @@ def ilpm_conv(x_padded, w):
 # direct: pixel-major, full filter set resident
 
 
-def direct_conv(x_padded, w):
+def direct_conv(x_padded, w, *, stride=1):
     """Same math, pixel-tile grid ordering; kept numerically identical —
     the structural difference (filter-set residency) is a kernel concern."""
     R, S, C, K = w.shape
     B, Hp, Wp, _ = x_padded.shape
-    H, W = Hp - R + 1, Wp - S + 1
+    H = (Hp - R) // stride + 1
+    W = (Wp - S) // stride + 1
     # gather taps then one big contraction per pixel tile (filters stationary)
-    taps = jnp.stack([x_padded[:, r:r + H, s:s + W, :]
+    taps = jnp.stack([x_padded[:, r:r + (H - 1) * stride + 1:stride,
+                               s:s + (W - 1) * stride + 1:stride, :]
                       for r in range(R) for s in range(S)], axis=-2)
     return jnp.einsum("bhwtc,tck->bhwk", taps, w.reshape(R * S, C, K),
                       preferred_element_type=jnp.float32).astype(x_padded.dtype)
@@ -154,14 +193,16 @@ def winograd_output_transform(m, H, W):
     return y.reshape(Bsz, H, W, K)
 
 
-def winograd_conv(x_padded, w):
-    """Full F(2x2,3x3) pipeline; requires even H, W."""
+def winograd_conv(x_padded, w, *, u=None):
+    """Full F(2x2,3x3) pipeline; requires even H, W. ``u`` optionally
+    carries the precomputed filter transform (frozen at inference)."""
     R, S, C, K = w.shape
     assert (R, S) == (3, 3), "winograd F(2,3) is 3x3-only"
     B, Hp, Wp, _ = x_padded.shape
     H, W = Hp - 2, Wp - 2
     assert H % 2 == 0 and W % 2 == 0, "even output dims required"
-    u = winograd_filter_transform(w)                      # (4,4,C,K)
+    if u is None:
+        u = winograd_filter_transform(w)                  # (4,4,C,K)
     v = winograd_input_transform(x_padded, H, W)          # (B,4,4,nt,C)
     m = jnp.einsum("bxytc,xyck->bxytk", v, u,
                    preferred_element_type=jnp.float32)    # 16 batched GEMMs
@@ -173,29 +214,39 @@ def winograd_conv(x_padded, w):
 
 
 def depthwise_conv(x_padded, w, *, stride=1):
-    """x_padded: (B, Hp, Wp, C) pre-padded; w: (R, S, 1, C) -> (B, H, W, C).
+    """x_padded: (B, Hp, Wp, C) pre-padded; w: (R, S, 1, M*C)
+    -> (B, H, W, M*C).
 
     The algorithm's structure in jnp: static tap loop, each tap a strided
     window of the resident image scaled by one per-channel filter row — all
-    VPU work, no contraction (each channel convolves only itself).
+    VPU work, no contraction (each channel convolves only itself). Channel
+    multipliers M > 1 follow lax's HWIO convention: output channel k reads
+    input channel k // M.
     """
-    R, S, _, C = w.shape
-    B, Hp, Wp, _ = x_padded.shape
+    R, S, _, K = w.shape
+    B, Hp, Wp, C = x_padded.shape
+    assert K % C == 0, (w.shape, x_padded.shape)
+    mult = K // C
     H = (Hp - R) // stride + 1
     W = (Wp - S) // stride + 1
-    acc = jnp.zeros((B, H, W, C), jnp.float32)
+    acc = jnp.zeros((B, H, W, K), jnp.float32)
     for r in range(R):
         for s in range(S):
             xs = x_padded[:, r:r + (H - 1) * stride + 1:stride,
                           s:s + (W - 1) * stride + 1:stride, :]
+            if mult > 1:
+                xs = jnp.repeat(xs, mult, axis=-1)
             acc = acc + xs.astype(jnp.float32) * w[r, s, 0].astype(jnp.float32)
     return acc.astype(x_padded.dtype)
 
 
-def pointwise_conv(x, w):
-    """x: (B, H, W, C); w: (1, 1, C, K) -> (B, H, W, K).
+def pointwise_conv(x, w, *, stride=1):
+    """x: (B, H, W, C); w: (1, 1, C, K) -> (B, ceil(H/s), ceil(W/s), K).
 
-    A 1x1 conv is one (pixels, C) @ (C, K) GEMM — no padding, no taps."""
+    A 1x1 conv is one (pixels, C) @ (C, K) GEMM — no padding, no taps; a
+    strided 1x1 (ResNet projection shortcut) just subsamples first."""
+    if stride != 1:
+        x = x[:, ::stride, ::stride, :]
     return jnp.einsum("bhwc,ck->bhwk", x, w[0, 0],
                       preferred_element_type=jnp.float32).astype(x.dtype)
 

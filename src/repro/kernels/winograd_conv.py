@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import ref as _ref
+from repro.kernels.fusion import epilogue_operands
 from repro.kernels.gemm import gemm
 
 winograd_filter_transform = _ref.winograd_filter_transform
@@ -72,8 +73,10 @@ def _at_combine(rows):
     return [m0 + m1 + m2, m1 - m2 - m3]
 
 
-def _trans_out_kernel(m_ref, o_ref, *, TH, TW):
-    """m_ref: (1, 4, 4, TH*TW, K) -> o_ref: (1, 2*TH, 2*TW, K)."""
+def _trans_out_kernel(m_ref, *refs, TH, TW, act, fused):
+    """m_ref: (1, 4, 4, TH*TW, K); refs: optional (scale, bias) (1, K),
+    then o_ref (1, 2*TH, 2*TW, K)."""
+    o_ref = refs[-1]
     K = m_ref.shape[-1]
     m = m_ref[0].astype(jnp.float32)                     # (4,4,nt,K)
     t = _at_combine([m[i] for i in range(4)])            # 2 x (4,nt,K)
@@ -83,26 +86,43 @@ def _trans_out_kernel(m_ref, o_ref, *, TH, TW):
         y[a][0], y[a][1] = ya
     y = jnp.stack([jnp.stack(row, axis=0) for row in y], axis=0)  # (2,2,nt,K)
     y = y.transpose(2, 0, 1, 3).reshape(TH, TW, 2, 2, K).transpose(0, 2, 1, 3, 4)
-    o_ref[0] = y.reshape(2 * TH, 2 * TW, K).astype(o_ref.dtype)
+    y = y.reshape(2 * TH, 2 * TW, K)
+    if fused:
+        y = y * refs[0][0] + refs[1][0]
+    y = _ref.apply_act(y, act)
+    o_ref[0] = y.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("H", "W", "interpret"))
-def winograd_output_transform(m, *, H, W, interpret=False):
+@functools.partial(jax.jit, static_argnames=("H", "W", "act", "interpret"))
+def winograd_output_transform(m, *, H, W, scale=None, bias=None, act=None,
+                              interpret=False):
     B = m.shape[0]
     K = m.shape[-1]
     th, tw = H // 2, W // 2
+    operands = [m]
+    in_specs = [pl.BlockSpec((1, 4, 4, th * tw, K),
+                             lambda b: (b, 0, 0, 0, 0))]
+    fused, extra, extra_specs = epilogue_operands(
+        scale, bias, K, K, lambda b: (0, 0))  # single-block grid: full K
+    operands += extra
+    in_specs += extra_specs
     return pl.pallas_call(
-        functools.partial(_trans_out_kernel, TH=th, TW=tw),
+        functools.partial(_trans_out_kernel, TH=th, TW=tw, act=act,
+                          fused=fused),
         grid=(B,),
-        in_specs=[pl.BlockSpec((1, 4, 4, th * tw, K), lambda b: (b, 0, 0, 0, 0))],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, H, W, K), lambda b: (b, 0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B, H, W, K), m.dtype),
         interpret=interpret,
-    )(m)
+    )(*operands)
 
 
-def winograd_conv(x_padded, w, *, u=None, interpret=False):
-    """Full pipeline. `u` (precomputed filter transform) optional."""
+def winograd_conv(x_padded, w, *, u=None, scale=None, bias=None, act=None,
+                  interpret=False):
+    """Full pipeline. `u` (precomputed filter transform) optional — at
+    inference weights are frozen, so the engine computes `U = G g Gᵀ` once
+    per plan build and passes it here; the (scale, bias, act) epilogue is
+    folded into the output-transform kernel's write."""
     B, Hp, Wp, C = x_padded.shape
     R, S, _, K = w.shape
     assert (R, S) == (3, 3)
@@ -117,4 +137,5 @@ def winograd_conv(x_padded, w, *, u=None, interpret=False):
     m = jax.vmap(lambda vb: jax.vmap(
         lambda vt, ut: gemm(vt, ut, interpret=interpret))(vb, uf))(vf)
     m = m.reshape(B, 4, 4, -1, K)
-    return winograd_output_transform(m, H=H, W=W, interpret=interpret)
+    return winograd_output_transform(m, H=H, W=W, scale=scale, bias=bias,
+                                     act=act, interpret=interpret)

@@ -2,12 +2,14 @@
 
 Inverted-residual blocks (expand 1x1 -> depthwise 3x3 -> project 1x1) built
 entirely from ``repro.core.algorithms.conv2d`` sites, so the whole backbone
-runs under the TuningPlan flow exactly like ``resnet.forward``: every
-pointwise site dispatches the pointwise kernel, every depthwise site (stride
-1 *and* 2 — the depthwise kernel downsamples in-kernel) the depthwise
-kernel, each with its per-layer tuned block parameters. Zhang et al. (2020)
-show these two layer types dominate mobile inference time, which is why they
-get their own kernels rather than riding the dense five.
+runs under the TuningPlan flow exactly like ``resnet.forward``: the strided
+dense stem dispatches a strided ilpm/direct kernel, every pointwise site
+the pointwise kernel, every depthwise site (stride 1 *and* 2 — the
+depthwise kernel downsamples in-kernel) the depthwise kernel, each with its
+per-layer tuned block parameters and its ReLU6/BN epilogue fused into the
+kernel's output write. Zhang et al. (2020) show the depthwise/pointwise
+layer types dominate mobile inference time, which is why they get their own
+kernels rather than riding the dense five.
 
 Config ``extra`` keys: ``settings`` — MobileNetV2's (t, c, n, s) rows
 (expansion, out channels, repeats, first-block stride); ``stem`` / ``head``
@@ -81,32 +83,37 @@ def conv_specs(cfg):
     return specs
 
 
-def forward(params, cfg, images, *, algorithm="auto", plan=None):
+def forward(params, cfg, images, *, algorithm="auto", plan=None,
+            winograd_u=None):
     """images: (B,H,W,3) NHWC -> logits (B, classes).
 
     `plan` maps layer names ("stem", "s0b0.dw", "s1b0.pw1", ...) to
     autotuner `Choice`s, same contract as ``resnet.forward``: a planned
     layer dispatches to its tuned algorithm with its tuned kernel params,
-    overriding `algorithm`. Plan lookup is trace-time Python, so a jitted
-    forward bakes in per-layer dispatch. Activations are ReLU6 (the
-    MobileNetV2 nonlinearity); projection convs are linear.
+    overriding `algorithm`; `winograd_u` carries cached Winograd filter
+    transforms per layer name. Plan lookup is trace-time Python, so a
+    jitted forward bakes in per-layer dispatch. Activations are ReLU6
+    (the MobileNetV2 nonlinearity), fused into each conv's epilogue;
+    projection convs are linear. The strided dense stem runs the strided
+    ilpm/direct kernels under the tuner, not the XLA escape hatch.
     """
     plan = plan or {}
-    x = jax.nn.relu6(_conv(params["stem"], images, 2, "xla",
-                           choice=plan.get("stem")))
+    wu = winograd_u or {}
+    x = _conv(params["stem"], images, 2, algorithm,
+              choice=plan.get("stem"), act="relu6", u=wu.get("stem"))
     for name, cin, mid, cout, stride in _blocks(cfg):
         p = params[name]
         h = x
         if "pw1" in p:
-            h = jax.nn.relu6(_conv(p["pw1"], h, 1, algorithm,
-                                   choice=plan.get(f"{name}.pw1")))
-        h = jax.nn.relu6(_conv(p["dw"], h, stride, algorithm,
-                               choice=plan.get(f"{name}.dw")))
+            h = _conv(p["pw1"], h, 1, algorithm,
+                      choice=plan.get(f"{name}.pw1"), act="relu6")
+        h = _conv(p["dw"], h, stride, algorithm,
+                  choice=plan.get(f"{name}.dw"), act="relu6")
         h = _conv(p["pw2"], h, 1, algorithm, choice=plan.get(f"{name}.pw2"))
         if stride == 1 and cin == cout:
             h = h + x
         x = h
-    x = jax.nn.relu6(_conv(params["head"], x, 1, algorithm,
-                           choice=plan.get("head")))
+    x = _conv(params["head"], x, 1, algorithm, choice=plan.get("head"),
+              act="relu6")
     x = x.mean(axis=(1, 2))
     return x @ params["fc"]["w"] + params["fc"]["b"]

@@ -1,9 +1,14 @@
 """ResNet (paper's evaluation network) — NHWC, inference-folded BatchNorm.
 
-Every 3x3 convolution routes through ``repro.core.algorithms`` so the whole
-net can run under any of the five algorithms the paper benchmarks (im2col,
-libdnn, winograd, direct, ilpm). This is the vehicle for the paper's Fig. 5 /
-Tables 3-4 reproduction and the single-image inference engine examples.
+Every convolution — the 7x7/2 stem, every 3x3 (strided stage entries
+included), and every 1x1 (bottleneck reduce/expand, projection shortcuts)
+— routes through ``repro.core.algorithms`` so the whole backbone runs
+under the TuningPlan flow: no conv site is hardwired to the XLA escape
+hatch. Each site passes its folded-BN scale/bias and activation into
+``conv2d`` so the tuned kernel applies the epilogue inside its output
+write (conv+BN+act = one HBM pass). This is the vehicle for the paper's
+Fig. 5 / Tables 3-4 reproduction and the single-image inference engine
+examples.
 """
 from __future__ import annotations
 
@@ -53,15 +58,16 @@ def model_specs(cfg):
 
 
 def conv_specs(cfg):
-    """(name, ConvSpec) per spatial conv site, keyed like the params —
-    the plan enumeration the engine tunes.
+    """(name, ConvSpec) per conv site, keyed like the params — the plan
+    enumeration the engine tunes.
 
     Walks the exact geometry of ``forward``: stem (7x7 stride 2) then
     max-pool (stride 2), then each stage's blocks — the first block of
-    stages 1+ enters with stride 2, and bottleneck stages tune the 3x3 at
-    the bottleneck width (cout // 4). 1x1 convs (bottleneck c1/c3,
-    projection shortcuts) run on the hardcoded XLA path in ``forward`` and
-    are not planned or counted in the traffic report.
+    stages 1+ enters with stride 2 (carried by c1 for basic blocks, c2 for
+    bottlenecks, and the 1x1 projection shortcut), and bottleneck stages
+    tune the 3x3 at the bottleneck width (cout // 4). Every site is
+    enumerated — stem, strided entries, and 1x1s included — so a tuned
+    plan covers 100% of the backbone's conv sites.
     """
     from repro.core.convspec import ConvSpec
 
@@ -80,10 +86,18 @@ def conv_specs(cfg):
         for bi in range(n):
             stride = 2 if (si > 0 and bi == 0) else 1
             name = f"s{si}b{bi}"
+            if stride != 1 or cin != cout:
+                specs.append((f"{name}.proj", ConvSpec(
+                    h=size, w=size, c=cin, k=cout, r=1, s=1, stride=stride)))
             if bottleneck:
                 mid = cout // 4
+                specs.append((f"{name}.c1", ConvSpec(
+                    h=size, w=size, c=cin, k=mid, r=1, s=1)))
                 specs.append((f"{name}.c2", ConvSpec(
                     h=size, w=size, c=mid, k=mid, stride=stride)))
+                specs.append((f"{name}.c3", ConvSpec(
+                    h=-(-size // stride), w=-(-size // stride), c=mid,
+                    k=cout, r=1, s=1)))
             else:
                 specs.append((f"{name}.c1", ConvSpec(
                     h=size, w=size, c=cin, k=cout, stride=stride)))
@@ -95,52 +109,68 @@ def conv_specs(cfg):
     return specs
 
 
-def _conv(p, x, stride, algorithm, padding="SAME", choice=None):
+def _conv(p, x, stride, algorithm, padding="SAME", choice=None, act=None,
+          u=None):
+    """One conv site: folded-BN scale/bias and the activation ride into
+    the kernel as a fused epilogue (``algorithms.conv2d`` threads them to
+    the dispatched kernel's output write)."""
     from repro.core import algorithms
 
-    y = algorithms.conv2d(x, p["w"], stride=stride, padding=padding,
-                          algorithm=algorithm, choice=choice)
-    return y * p["scale"] + p["bias"]
+    return algorithms.conv2d(x, p["w"], stride=stride, padding=padding,
+                             algorithm=algorithm, choice=choice,
+                             scale=p["scale"], bias=p["bias"], act=act, u=u)
 
 
-def _block(p, x, bottleneck, stride, algorithm, name="", plan=None):
+def _block(p, x, bottleneck, stride, algorithm, name="", plan=None, wu=None):
     plan = plan or {}
+    wu = wu or {}
     idn = x
     if "proj" in p:
-        idn = _conv(p["proj"], x, stride, "xla")  # 1x1: plain matmul path
+        idn = _conv(p["proj"], x, stride, algorithm,
+                    choice=plan.get(f"{name}.proj"))
     if bottleneck:
-        h = jax.nn.relu(_conv(p["c1"], x, 1, "xla"))
-        h = jax.nn.relu(_conv(p["c2"], h, stride, algorithm,
-                              choice=plan.get(f"{name}.c2")))
-        h = _conv(p["c3"], h, 1, "xla")
+        h = _conv(p["c1"], x, 1, algorithm, choice=plan.get(f"{name}.c1"),
+                  act="relu")
+        h = _conv(p["c2"], h, stride, algorithm,
+                  choice=plan.get(f"{name}.c2"), act="relu",
+                  u=wu.get(f"{name}.c2"))
+        h = _conv(p["c3"], h, 1, algorithm, choice=plan.get(f"{name}.c3"))
     else:
-        h = jax.nn.relu(_conv(p["c1"], x, stride, algorithm,
-                              choice=plan.get(f"{name}.c1")))
-        h = _conv(p["c2"], h, 1, algorithm, choice=plan.get(f"{name}.c2"))
+        h = _conv(p["c1"], x, stride, algorithm,
+                  choice=plan.get(f"{name}.c1"), act="relu",
+                  u=wu.get(f"{name}.c1"))
+        h = _conv(p["c2"], h, 1, algorithm, choice=plan.get(f"{name}.c2"),
+                  u=wu.get(f"{name}.c2"))
     return jax.nn.relu(h + idn)
 
 
-def forward(params, cfg, images, *, algorithm="ilpm", plan=None):
+def forward(params, cfg, images, *, algorithm="ilpm", plan=None,
+            winograd_u=None):
     """images: (B,H,W,3) NHWC -> logits (B, classes).
 
-    `algorithm` selects the conv algorithm for every 3x3 conv — the paper's
-    five contenders are all valid values (plus 'xla' reference). `plan`
-    optionally maps layer names ("stem", "s0b1.c2", ...) to autotuner
-    `Choice`s; a planned layer dispatches to its tuned algorithm with its
-    tuned kernel parameters, overriding `algorithm`. Plan lookup is
-    trace-time Python, so a jitted forward bakes in per-layer dispatch.
+    `algorithm` selects the conv algorithm for every conv site — the
+    paper's five contenders are all valid values (plus 'xla' reference);
+    1x1 sites degrade gracefully (pointwise/ilpm) and strided sites use
+    the strided ilpm/direct kernels. `plan` optionally maps layer names
+    ("stem", "s0b1.c2", "s1b0.proj", ...) to autotuner `Choice`s; a
+    planned layer dispatches to its tuned algorithm with its tuned kernel
+    parameters, overriding `algorithm`. `winograd_u` maps layer names to
+    cached filter transforms `U = G g Gᵀ` (computed once per engine build
+    — weights are frozen at inference). Plan lookup is trace-time Python,
+    so a jitted forward bakes in per-layer dispatch.
     """
     plan = plan or {}
+    wu = winograd_u or {}
     blocks = cfg.extra["blocks"]
     bottleneck = cfg.extra["bottleneck"]
-    x = jax.nn.relu(_conv(params["stem"], images, 2, "xla",
-                          choice=plan.get("stem")))
+    x = _conv(params["stem"], images, 2, algorithm,
+              choice=plan.get("stem"), act="relu", u=wu.get("stem"))
     x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
                               (1, 2, 2, 1), "SAME")
     for si, n in enumerate(blocks):
         for bi in range(n):
             stride = 2 if (si > 0 and bi == 0) else 1
             x = _block(params[f"s{si}b{bi}"], x, bottleneck, stride,
-                       algorithm, name=f"s{si}b{bi}", plan=plan)
+                       algorithm, name=f"s{si}b{bi}", plan=plan, wu=wu)
     x = x.mean(axis=(1, 2))
     return x @ params["fc"]["w"] + params["fc"]["b"]

@@ -1,3 +1,4 @@
+import inspect
 import os
 import sys
 from pathlib import Path
@@ -9,20 +10,35 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 
+# dispatch kwargs that are call-site geometry / fused-epilogue operands,
+# not tuned kernel parameters — the spies drop them so recorded calls
+# compare cleanly against plan Choice.params
+NON_TUNED_KEYS = ("stride", "scale", "bias", "act", "u")
+
+
 def spy_algorithms(monkeypatch):
-    """Wrap every registered conv kernel; record (algorithm, params).
+    """Wrap every registered conv kernel; record (algorithm, tuned_params).
 
     Shared by the plan-dispatch tests: the spy wrappers take ``**params``
     (VAR_KEYWORD), so ``ops.kernel_params`` passes dispatch's kwargs
-    through untouched and the recorded params are exactly what dispatch
-    was called with.
+    through untouched; the recorded params are what dispatch was called
+    with minus the non-tuned keys (stride/epilogue operands).
     """
     from repro.kernels import ops
 
     calls = []
-    for name, fn in list(ops.ALGORITHMS.items()):
+    originals = dict(ops.ALGORITHMS)
+    for name, fn in originals.items():
         def wrapper(x, w, *, impl="auto", _name=name, _fn=fn, **params):
-            calls.append((_name, tuple(sorted(params.items()))))
-            return _fn(x, w, impl=impl, **params)
+            calls.append((_name, tuple(sorted(
+                (k, v) for k, v in params.items()
+                if k not in NON_TUNED_KEYS))))
+            # re-apply the per-algorithm kwarg filter against the *real*
+            # wrapper: the spy's **params signature disables dispatch's
+            # own filtering, and the real kernels don't all take every
+            # geometry key (e.g. im2col has no stride)
+            accepted = inspect.signature(_fn).parameters
+            return _fn(x, w, impl=impl,
+                       **{k: v for k, v in params.items() if k in accepted})
         monkeypatch.setitem(ops.ALGORITHMS, name, wrapper)
     return calls

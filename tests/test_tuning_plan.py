@@ -69,9 +69,9 @@ def test_engine_auto_plan_drives_dispatch(monkeypatch, tmp_path):
     plan = eng.plan
     assert plan is not None
 
-    # the plan is genuinely per-layer: >= 2 distinct algorithms (strided
-    # sites fall back to xla, stride-1 3x3 sites get a tuned kernel), and
-    # the tuned kernel params differ across layers (block_k tracks K)
+    # the plan is genuinely per-layer: >= 2 distinct algorithms (3x3 sites
+    # pick a dense kernel, 1x1 projections pick pointwise), and the tuned
+    # kernel params differ across layers (block_k tracks K)
     assert len(set(plan.algorithms().values())) >= 2
     tuned = {n: c for n, c in plan.choices.items() if c.algorithm != "xla"}
     assert len(tuned) >= 2
@@ -113,16 +113,24 @@ def test_plan_validation_rejects_wrong_network(tmp_path):
 
 
 def test_bottleneck_plan_sites_and_widths():
-    """Bottleneck stages tune their 3x3 at the bottleneck width (cout/4),
-    one site per block — the spec enumeration walks the real geometry."""
+    """Bottleneck stages tune their 3x3 at the bottleneck width (cout/4)
+    and every 1x1 (reduce/expand/projection) is a planned pointwise site —
+    the spec enumeration walks the real geometry."""
     cfg = tiny_variant(get("resnet50"))
     eng = InferenceEngine(cfg)
     plan = eng.plan
-    assert set(plan.specs) == {"stem", "s0b0.c2", "s1b0.c2", "s2b0.c2",
-                               "s3b0.c2"}
+    assert set(plan.specs) == {"stem"} | {
+        f"s{si}b0.{c}" for si in range(4)
+        for c in ("proj", "c1", "c2", "c3")}
     assert (plan.specs["s0b0.c2"].c, plan.specs["s0b0.c2"].k) == (64, 64)
     assert (plan.specs["s3b0.c2"].c, plan.specs["s3b0.c2"].k) == (512, 512)
     assert plan.specs["s1b0.c2"].stride == 2  # stage entry carries stride
+    # 1x1 sites: reduce/expand widths and the strided projection shortcut
+    assert (plan.specs["s0b0.c1"].c, plan.specs["s0b0.c1"].k) == (64, 64)
+    assert (plan.specs["s0b0.c3"].c, plan.specs["s0b0.c3"].k) == (64, 256)
+    assert plan.specs["s1b0.proj"].stride == 2
+    assert plan.choices["s0b0.c1"].algorithm == "pointwise"
+    assert plan.choices["s1b0.proj"].algorithm == "pointwise"
     logits = eng.run(jax.random.normal(KEY, (32, 32, 3)))
     assert logits.shape == (cfg.vocab_size,)
     assert not bool(jnp.isnan(logits).any())
