@@ -5,6 +5,12 @@ PYTHON ?= python
 verify:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q
 
+# Fast-fail lint gate (ruff, critical rules only — see ruff.toml). CI runs
+# this as its first job, before the test matrix.
+.PHONY: lint
+lint:
+	$(PYTHON) -m ruff check .
+
 .PHONY: examples
 examples:
 	PYTHONPATH=src $(PYTHON) examples/quickstart.py
@@ -24,6 +30,18 @@ bench-mobilenet:
 .PHONY: bench-json
 bench-json:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/run.py --json BENCH_conv.json
+
+# Compare the fresh BENCH_conv.json against the committed baseline; fails
+# on any tuned-site -> xla fallback or a >25% interpret-proxy slowdown.
+.PHONY: bench-compare
+bench-compare:
+	$(PYTHON) tools/compare_bench.py benchmarks/baseline/BENCH_conv.json BENCH_conv.json
+
+# Micro-batched serving throughput/latency (>= 2 networks, one shared
+# EngineCache process) -> BENCH_serving.json.
+.PHONY: bench-serving
+bench-serving:
+	PYTHONPATH=src:. $(PYTHON) benchmarks/run.py --serve BENCH_serving.json
 
 # Validate every local link/anchor in README.md and docs/ (CI step).
 .PHONY: docs-check

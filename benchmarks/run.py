@@ -11,6 +11,13 @@ the tiny config end-to-end and writes one record per conv site (algorithm,
 tuned params, cost-model estimates, ConvSpec flops/bytes, and an
 interpret-mode proxy timing of the chosen kernel) so CI can track the perf
 trajectory across PRs. ``--config`` picks the network (default resnet18).
+
+``--serve PATH`` exercises the serving subsystem instead: concurrent
+single-image requests for >= 2 networks through one micro-batching
+``Server`` (one shared EngineCache process), reporting per-network
+throughput, latency percentiles, and batch-size histograms to
+BENCH_serving.json. CPU interpret-mode numbers are a trend line across
+PRs, not absolute device performance.
 """
 from __future__ import annotations
 
@@ -106,6 +113,50 @@ def emit_json(path, config="resnet18"):
           f"{len(payload['xla_sites'])} xla fallbacks")
 
 
+def emit_serving_json(path, networks=("resnet18", "mobilenet_v2"),
+                      requests_per_net=12, max_batch=4, window_ms=20.0):
+    """Serve ``requests_per_net`` single-image requests per network through
+    one micro-batching Server (shared EngineCache) and dump per-network
+    throughput/latency + cache stats to ``path`` (BENCH_serving.json)."""
+    import jax
+
+    from repro.serving import Server
+
+    assert len(networks) >= 2, "serving bench covers >= 2 networks"
+    server = Server(tiny=True, max_batch=max_batch, window_ms=window_ms)
+    key = jax.random.key(0)
+    img = jax.random.normal(key, (32, 32, 3))
+    for net in networks:  # build + jit outside the timed window
+        server.run(net, img)
+    t0 = time.perf_counter()
+    futures = []
+    for i in range(requests_per_net):  # interleave networks: the shared
+        for net in networks:           # cache serves them side by side
+            futures.append(server.submit(
+                net, jax.random.normal(jax.random.fold_in(key, i), (32, 32, 3))))
+    for f in futures:
+        f.result(timeout=600)
+    wall = time.perf_counter() - t0
+    stats = server.stats()
+    server.close()
+    payload = {
+        "networks": list(networks),
+        "requests_per_net": requests_per_net,
+        "max_batch": max_batch,
+        "window_ms": window_ms,
+        "wall_s": wall,
+        "throughput_rps": len(futures) / wall,
+        "per_network": stats["networks"],
+        "cache": stats["cache"],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {path}: {len(futures)} requests over {len(networks)} "
+          f"networks in {wall:.2f}s ({payload['throughput_rps']:.1f} req/s), "
+          f"cache {payload['cache']['misses']} builds / "
+          f"{payload['cache']['hits']} hits")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", metavar="PATH",
@@ -113,9 +164,15 @@ def main(argv=None) -> None:
                          "and exit (CI smoke mode)")
     ap.add_argument("--config", default="resnet18",
                     help="network for --json (tiny variant is used)")
+    ap.add_argument("--serve", metavar="PATH",
+                    help="run the micro-batched serving bench and emit "
+                         "throughput/latency JSON (BENCH_serving.json)")
     args = ap.parse_args(argv)
     if args.json:
         emit_json(args.json, config=args.config)
+        return
+    if args.serve:
+        emit_serving_json(args.serve)
         return
 
     t0 = time.time()

@@ -42,10 +42,13 @@ from repro.kernels import ops, ref
 STRIDED_DENSE = ("ilpm", "direct")
 
 
-def _auto(x, w, stride):
-    """Trace-time tuner lookup (memoized per ConvSpec)."""
+def _auto(x, w, stride, epilogue=False):
+    """Trace-time tuner lookup (memoized per ConvSpec). ``epilogue``
+    matches the costing to the call: a site dispatching fused BN/act must
+    be selected as its fused variant, the same way the engine's plans are
+    built (``build_plan(..., epilogue=True)``)."""
     spec = ConvSpec.from_tensors(x, w, stride)
-    tuned = autotune.select(spec)
+    tuned = autotune.select(spec, epilogue=epilogue)
     return tuned.algorithm, dict(tuned.params)
 
 
@@ -57,6 +60,7 @@ def conv2d(x, w, *, stride=1, padding="SAME", algorithm="auto", impl="auto",
     assert C % Cg == 0, f"image channels {C} vs filter depth {Cg}"
     groups = C // Cg
     ep = dict(scale=scale, bias=bias, act=act)
+    ep_on = scale is not None or bias is not None or act is not None
     if choice is not None:
         algorithm, params = choice.algorithm, dict(choice.params)
     else:
@@ -69,7 +73,7 @@ def conv2d(x, w, *, stride=1, padding="SAME", algorithm="auto", impl="auto",
     # ---- grouped family: depthwise kernel or XLA fallback ------------
     if groups > 1:
         if algorithm == "auto":
-            algorithm, params = _auto(x, w, stride)
+            algorithm, params = _auto(x, w, stride, epilogue=ep_on)
         depthwise_ok = groups == C and K % C == 0 and stride in (1, 2)
         if algorithm != "depthwise" or not depthwise_ok:
             # tuner punted, or a grouped-but-not-depthwise conv
@@ -92,7 +96,7 @@ def conv2d(x, w, *, stride=1, padding="SAME", algorithm="auto", impl="auto",
         return ref.apply_epilogue(y.reshape(B, hp, wp, K), **ep)
 
     if algorithm == "auto":
-        algorithm, params = _auto(x, w, stride)
+        algorithm, params = _auto(x, w, stride, epilogue=ep_on)
         if algorithm == "xla":  # tuner punted (e.g. stride > 2)
             return ref.apply_epilogue(
                 ref.conv2d_reference(x, w, stride=stride, padding=padding),

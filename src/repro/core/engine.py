@@ -78,10 +78,23 @@ class InferenceEngine:
         # (weights frozen): compute each winograd site's U once now, not
         # per forward, and thread the cache into the jitted forward.
         self.winograd_u = self._winograd_cache(plan) if plan else {}
-        self._fwd = jax.jit(functools.partial(
+        # winograd_u rides as a jit *argument* (a pytree, like params),
+        # not a closure constant: baked-in constants would be re-embedded
+        # into every trace of every entry point below.
+        fwd1 = functools.partial(
             self._model.forward, cfg=cfg, algorithm=algorithm,
-            plan=plan.choices if plan is not None else None,
-            winograd_u=self.winograd_u or None))
+            plan=plan.choices if plan is not None else None)
+        self._fwd = jax.jit(fwd1)
+        # Batch-dim-tolerant entry for the serving layer: map the *exact*
+        # single-image computation over the batch inside one jitted call
+        # (lax.map), so a micro-batched dispatch is bitwise-equal to N
+        # sequential `run` calls — batching changes scheduling, never
+        # numerics. One retrace per distinct B; serving pads batches to
+        # power-of-two buckets to bound the trace count.
+        self._fwd_batch = jax.jit(
+            lambda params, images, winograd_u=None: jax.lax.map(
+                lambda im: fwd1(params, images=im[None],
+                                winograd_u=winograd_u)[0], images))
 
     # ------------------------------------------------------------------
     # plan construction
@@ -164,7 +177,26 @@ class InferenceEngine:
 
     def run(self, image):
         """image: (H, W, 3) single image -> logits (classes,)."""
-        return self._fwd(self.params, images=image[None])[0]
+        return self._fwd(self.params, images=image[None],
+                         winograd_u=self.winograd_u or None)[0]
+
+    def run_batch(self, images):
+        """images: (B, H, W, 3) micro-batch -> logits (B, classes).
+
+        Each element runs the identical batch-1 computation `run`
+        dispatches (same tuned per-layer kernels, same epilogues), mapped
+        inside one jitted call — outputs are bitwise-equal to sequential
+        `run` calls. This is the serving layer's dispatch entry.
+        """
+        return self._fwd_batch(self.params, images,
+                               winograd_u=self.winograd_u or None)
+
+    def trace_count(self):
+        """Number of distinct shapes the batch forward has been traced
+        for (None if this jax version doesn't expose it) — the serving
+        tests use it to prove padded buckets bound retraces."""
+        size = getattr(self._fwd_batch, "_cache_size", None)
+        return size() if callable(size) else None
 
     def traffic_report(self):
         """Per-layer bytes/flops for every planned conv site — the energy

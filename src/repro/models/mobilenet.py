@@ -85,7 +85,9 @@ def conv_specs(cfg):
 
 def forward(params, cfg, images, *, algorithm="auto", plan=None,
             winograd_u=None):
-    """images: (B,H,W,3) NHWC -> logits (B, classes).
+    """images: (B,H,W,3) NHWC -> logits (B, classes); a single unbatched
+    (H,W,3) image maps to (classes,) — same batch-dim tolerance as
+    ``resnet.forward``, so the forward is mappable per element.
 
     `plan` maps layer names ("stem", "s0b0.dw", "s1b0.pw1", ...) to
     autotuner `Choice`s, same contract as ``resnet.forward``: a planned
@@ -97,6 +99,9 @@ def forward(params, cfg, images, *, algorithm="auto", plan=None,
     projection convs are linear. The strided dense stem runs the strided
     ilpm/direct kernels under the tuner, not the XLA escape hatch.
     """
+    single = images.ndim == 3
+    if single:
+        images = images[None]
     plan = plan or {}
     wu = winograd_u or {}
     x = _conv(params["stem"], images, 2, algorithm,
@@ -116,4 +121,5 @@ def forward(params, cfg, images, *, algorithm="auto", plan=None,
     x = _conv(params["head"], x, 1, algorithm, choice=plan.get("head"),
               act="relu6")
     x = x.mean(axis=(1, 2))
-    return x @ params["fc"]["w"] + params["fc"]["b"]
+    logits = x @ params["fc"]["w"] + params["fc"]["b"]
+    return logits[0] if single else logits

@@ -146,7 +146,8 @@ def _block(p, x, bottleneck, stride, algorithm, name="", plan=None, wu=None):
 
 def forward(params, cfg, images, *, algorithm="ilpm", plan=None,
             winograd_u=None):
-    """images: (B,H,W,3) NHWC -> logits (B, classes).
+    """images: (B,H,W,3) NHWC -> logits (B, classes); a single unbatched
+    (H,W,3) image maps to (classes,).
 
     `algorithm` selects the conv algorithm for every conv site — the
     paper's five contenders are all valid values (plus 'xla' reference);
@@ -158,7 +159,15 @@ def forward(params, cfg, images, *, algorithm="ilpm", plan=None,
     cached filter transforms `U = G g Gᵀ` (computed once per engine build
     — weights are frozen at inference). Plan lookup is trace-time Python,
     so a jitted forward bakes in per-layer dispatch.
+
+    Batch-dim tolerance makes the forward mappable per element: under
+    ``jax.vmap`` / ``lax.map`` over an image stack each element arrives
+    unbatched, is promoted to a batch of one (the paper's single-image
+    shape), and squeezed back on return.
     """
+    single = images.ndim == 3
+    if single:
+        images = images[None]
     plan = plan or {}
     wu = winograd_u or {}
     blocks = cfg.extra["blocks"]
@@ -173,4 +182,5 @@ def forward(params, cfg, images, *, algorithm="ilpm", plan=None,
             x = _block(params[f"s{si}b{bi}"], x, bottleneck, stride,
                        algorithm, name=f"s{si}b{bi}", plan=plan, wu=wu)
     x = x.mean(axis=(1, 2))
-    return x @ params["fc"]["w"] + params["fc"]["b"]
+    logits = x @ params["fc"]["w"] + params["fc"]["b"]
+    return logits[0] if single else logits

@@ -1,0 +1,17 @@
+"""Serving subsystem — the request loop above ``InferenceEngine``.
+
+``Server`` accepts single-image requests for many networks out of one
+process; ``MicroBatcher`` coalesces concurrent requests within a deadline
+window into one padded-batch dispatch (batch-1 traffic keeps the paper's
+single-image fast path); ``EngineCache`` LRU-caches built engines keyed by
+(network, input_size, device, dtype) and reuses tuned plans across
+variants. See docs/serving.md for the request lifecycle.
+"""
+from repro.serving.batcher import MicroBatcher, bucket  # noqa: F401
+from repro.serving.engine_cache import (  # noqa: F401
+    EngineCache,
+    engine_key,
+    plan_key,
+)
+from repro.serving.request import Request  # noqa: F401
+from repro.serving.server import Server  # noqa: F401

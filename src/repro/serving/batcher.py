@@ -1,0 +1,178 @@
+"""Micro-batcher: coalesce concurrent single-image requests into one
+padded-batch dispatch within a deadline window.
+
+The paper's premise is batch-1 requests arriving one at a time; under
+concurrent traffic the device still prefers one dispatch over N. The
+batcher holds the first request of a batch for at most ``window_ms``,
+coalescing whatever else arrives (up to ``max_batch``), then dispatches:
+
+  * **batch == 1** — the single-image fast path: ``engine.run(image)``,
+    exactly the paper's tuned per-layer dispatch, zero batching overhead;
+  * **batch > 1**  — one ``engine.run_batch`` call on the stacked images,
+    padded up to a power-of-two bucket (re-using the last image as filler)
+    so a ragged final micro-batch doesn't cost a fresh jit trace for every
+    distinct batch size.
+
+``run_batch`` maps the *single-image* computation over the batch inside
+one jitted call (``lax.map``), so outputs are bitwise-equal to sequential
+``engine.run`` calls — micro-batching changes scheduling, never numerics.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from concurrent.futures import Future
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving import request as req_mod
+from repro.serving.request import Request
+
+_STOP = object()
+
+
+def bucket(n: int, max_batch: int) -> int:
+    """Smallest power of two >= n, capped at max_batch — the padded batch
+    size. Bounds the set of traced batch shapes to O(log max_batch)."""
+    assert 1 <= n <= max_batch
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, max_batch)
+
+
+class MicroBatcher:
+    """One request loop around one engine.
+
+    ``submit`` is non-blocking and returns a Future; a daemon thread owns
+    the engine and is the only place dispatch happens, so callers never
+    contend on the device.
+    """
+
+    def __init__(self, engine, *, max_batch: int = 8, window_ms: float = 2.0,
+                 pad_batches: bool = True):
+        assert max_batch >= 1
+        self.engine = engine
+        self.max_batch = max_batch
+        self.window_s = window_ms / 1e3
+        self.pad_batches = pad_batches
+        self.dispatches: list[dict] = []  # {batch, padded, latencies}
+        self._queue: queue.Queue = queue.Queue()
+        self._closed = False
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name=f"microbatcher-{id(self):x}")
+        self._thread.start()
+
+    # ------------------------------------------------------------------
+
+    def submit(self, image) -> Future:
+        """Enqueue one (H, W, C) image; the Future resolves to (classes,)
+        logits."""
+        if self._closed:
+            raise RuntimeError("batcher is closed")
+        req = Request(image)
+        self._queue.put(req)
+        return req.future
+
+    def close(self, timeout: float | None = 30.0) -> None:
+        """Drain the queue, dispatch what's pending, stop the thread."""
+        if self._closed:
+            return
+        self._closed = True
+        self._queue.put(_STOP)
+        self._thread.join(timeout)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # ------------------------------------------------------------------
+
+    def _loop(self) -> None:
+        import time
+
+        stopping = False
+        while not stopping:
+            req = self._queue.get()  # block until traffic (or shutdown)
+            if req is _STOP:
+                break
+            batch = [req]
+            deadline = time.perf_counter() + self.window_s
+            while len(batch) < self.max_batch:
+                wait = deadline - time.perf_counter()
+                if wait <= 0:
+                    break
+                try:
+                    nxt = self._queue.get(timeout=wait)
+                except queue.Empty:
+                    break
+                if nxt is _STOP:
+                    stopping = True
+                    break
+                batch.append(nxt)
+            self._dispatch(batch)
+        # a submit racing close() can enqueue behind the _STOP sentinel;
+        # fail those requests instead of leaving their futures unresolved
+        while True:
+            try:
+                req = self._queue.get_nowait()
+            except queue.Empty:
+                return
+            if req is not _STOP:
+                req_mod.fail(req, RuntimeError("batcher closed"))
+
+    def _dispatch(self, batch: list[Request]) -> None:
+        try:
+            if len(batch) == 1:
+                # the paper's single-image fast path: tuned per-layer
+                # dispatch on exactly one image, no stacking, no padding
+                outs = [self.engine.run(batch[0].image)]
+            else:
+                n = len(batch)
+                padded = bucket(n, self.max_batch) if self.pad_batches else n
+                images = [r.image for r in batch]
+                images += [images[-1]] * (padded - n)  # filler rows
+                logits = self.engine.run_batch(jnp.stack(images))
+                outs = [logits[i] for i in range(n)]
+            # settle async dispatch before resolving: futures hand back
+            # finished results, and latency stamps include the compute
+            outs = jax.block_until_ready(outs)
+        except Exception as e:  # resolve, don't kill the loop
+            for r in batch:
+                req_mod.fail(r, e)
+            return
+        for r, o in zip(batch, outs):
+            req_mod.resolve(r, o)
+        self.dispatches.append({
+            "batch": len(batch),
+            "padded": len(batch) if len(batch) == 1 else padded,
+            "latencies": [r.latency for r in batch],
+        })
+
+    # ------------------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Dispatch-log aggregates: request count, batch-size histogram,
+        latency mean/p50/p95/max (seconds, submit -> future resolution)."""
+        lats = sorted(l for d in self.dispatches for l in d["latencies"])
+
+        def pct(q):
+            if not lats:
+                return None
+            return lats[min(len(lats) - 1, round(q / 100 * (len(lats) - 1)))]
+
+        hist: dict[int, int] = {}
+        for d in self.dispatches:
+            hist[d["batch"]] = hist.get(d["batch"], 0) + 1
+        return {
+            "requests": len(lats),
+            "dispatches": len(self.dispatches),
+            "batch_histogram": dict(sorted(hist.items())),
+            "latency_mean_s": sum(lats) / len(lats) if lats else None,
+            "latency_p50_s": pct(50),
+            "latency_p95_s": pct(95),
+            "latency_max_s": max(lats) if lats else None,
+        }

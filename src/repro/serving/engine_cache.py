@@ -1,0 +1,109 @@
+"""LRU cache of built ``InferenceEngine``s + tuned-plan reuse.
+
+Many model variants (resnet18/50, mobilenet_v2, tiny variants) share one
+serving process. Building an engine is expensive — tune a plan, precompute
+Winograd transforms, jit the forward — so the cache keys each built engine
+by ``(network, input_size, device, dtype)`` and evicts least-recently-used
+beyond ``capacity``.
+
+Plans are cached separately, keyed by ``(network, input_size)`` only: a
+``TuningPlan`` is device-agnostic and dtype-agnostic (it maps layer names
+to algorithm + block parameters for a conv *geometry*), so a bf16 engine
+deployed next to an f32 one reuses the tuned plan instead of re-tuning —
+the engine's existing ``plan=`` constructor hook makes this free.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+
+import jax
+
+from repro.core.engine import InferenceEngine
+
+
+def engine_key(cfg, device: str | None = None) -> tuple:
+    """The cache key: (network, input_size, device, dtype).
+
+    ``device`` defaults to the platform of the default JAX device — the
+    thing kernel lowering actually varies over.
+    """
+    if device is None:
+        device = jax.devices()[0].platform
+    return (cfg.name, cfg.extra.get("img"), device, cfg.param_dtype)
+
+
+def plan_key(cfg) -> tuple:
+    """Plan reuse key: geometry only (network, input_size)."""
+    return (cfg.name, cfg.extra.get("img"))
+
+
+class EngineCache:
+    """Thread-safe LRU of InferenceEngines; hit returns the *identical*
+    engine object (same jitted forward, same params, same plan)."""
+
+    def __init__(self, capacity: int = 4, tune_mode: str = "cost_model"):
+        assert capacity >= 1
+        self.capacity = capacity
+        self.tune_mode = tune_mode
+        self._engines: OrderedDict[tuple, InferenceEngine] = OrderedDict()
+        self._plans: dict[tuple, object] = {}
+        self._lock = threading.RLock()
+        self._build_locks: dict[tuple, threading.Lock] = {}
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._engines)
+
+    def __contains__(self, cfg) -> bool:
+        return engine_key(cfg) in self._engines
+
+    def get(self, cfg, *, params=None, seed: int = 0) -> InferenceEngine:
+        """The engine for ``cfg``, building (and possibly evicting) on miss.
+
+        A miss reuses any cached plan for the same (network, input_size)
+        geometry, so an evicted-and-rebuilt engine — or a dtype variant —
+        skips tuning and goes straight to jit.
+
+        The slow build (tune + jit) runs under a per-key lock, not the
+        global one: a first request for network B never stalls behind
+        network A's multi-second build, and two racing builders of the
+        same key still dedupe to one engine.
+        """
+        key = engine_key(cfg)
+        with self._lock:
+            eng = self._engines.get(key)
+            if eng is not None:
+                self.hits += 1
+                self._engines.move_to_end(key)
+                return eng
+            build_lock = self._build_locks.setdefault(key, threading.Lock())
+        with build_lock:
+            with self._lock:
+                eng = self._engines.get(key)
+                if eng is not None:  # lost the race: the engine exists now
+                    self.hits += 1
+                    self._engines.move_to_end(key)
+                    return eng
+                pkey = plan_key(cfg)
+                plan = self._plans.get(pkey)
+            eng = InferenceEngine(cfg, params=params, seed=seed, plan=plan,
+                                  tune_mode=self.tune_mode)
+            with self._lock:
+                self.misses += 1
+                self._plans.setdefault(pkey, eng.plan)
+                self._engines[key] = eng
+                while len(self._engines) > self.capacity:
+                    self._engines.popitem(last=False)  # least recently used
+                    self.evictions += 1
+                self._build_locks.pop(key, None)
+            return eng
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"capacity": self.capacity, "size": len(self._engines),
+                    "hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions,
+                    "keys": list(self._engines)}

@@ -1,0 +1,47 @@
+"""Serving request types — what a client submits and what it awaits.
+
+A ``Request`` is one single-image inference in flight: the image, a
+``concurrent.futures.Future`` that resolves to the logits, and timestamps
+so the server can report queueing + batching latency per request. Clients
+never construct these directly — ``Server.submit`` / ``MicroBatcher.submit``
+do — but tests and benchmarks read the timing fields off completed ones.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+
+_IDS = itertools.count()
+
+
+@dataclass
+class Request:
+    """One single-image request: ``image`` is (H, W, C) NHWC-minus-batch;
+    ``future`` resolves to the (classes,) logits (or raises the dispatch
+    error). ``arrival`` is set at submit time; ``done`` when the batcher
+    resolves the future — their difference is the request's full latency
+    (queue wait + batching window + dispatch)."""
+
+    image: object
+    future: Future = field(default_factory=Future)
+    arrival: float = field(default_factory=time.perf_counter)
+    done: float | None = None
+    id: int = field(default_factory=lambda: next(_IDS))
+
+    @property
+    def latency(self) -> float | None:
+        """Seconds from submit to resolution; None while in flight."""
+        return None if self.done is None else self.done - self.arrival
+
+
+def resolve(req: Request, value) -> None:
+    """Stamp completion time and fulfil the future."""
+    req.done = time.perf_counter()
+    req.future.set_result(value)
+
+
+def fail(req: Request, exc: BaseException) -> None:
+    req.done = time.perf_counter()
+    req.future.set_exception(exc)

@@ -1,0 +1,109 @@
+"""The serving front door: single-image requests in, logits futures out.
+
+One ``Server`` owns one ``EngineCache`` (shared across every network it
+serves) and one ``MicroBatcher`` per active network. ``submit`` routes a
+request to its network's batcher — building the engine through the cache
+on first sight — and returns immediately with a Future. This is the seam
+every future scaling layer (sharding, multi-backend, continuous batching)
+plugs into: everything above it speaks (network, image) -> logits,
+everything below it is the tuned-engine world.
+"""
+from __future__ import annotations
+
+import threading
+
+from repro.serving.batcher import MicroBatcher
+from repro.serving.engine_cache import EngineCache, engine_key
+
+
+class Server:
+    """Micro-batched multi-network serving out of one process.
+
+    ``networks`` are named configs (``get(name)``) or ArchConfig objects;
+    ``tiny=True`` maps names through ``tiny_variant`` (the CPU/CI path).
+    ``capacity`` bounds the engine cache; ``max_batch`` / ``window_ms``
+    configure every batcher.
+    """
+
+    def __init__(self, *, cache: EngineCache | None = None, capacity: int = 4,
+                 tune_mode: str = "cost_model", max_batch: int = 8,
+                 window_ms: float = 2.0, tiny: bool = False):
+        self.engines = cache if cache is not None else EngineCache(
+            capacity=capacity, tune_mode=tune_mode)
+        self.max_batch = max_batch
+        self.window_ms = window_ms
+        self.tiny = tiny
+        self._batchers: dict[tuple, MicroBatcher] = {}
+        self._lock = threading.Lock()
+        self._closed = False
+
+    # ------------------------------------------------------------------
+
+    def _resolve_cfg(self, network):
+        if isinstance(network, str):
+            from repro.configs import get, tiny_variant
+
+            cfg = get(network)
+            return tiny_variant(cfg) if self.tiny else cfg
+        return network
+
+    def _batcher(self, cfg) -> MicroBatcher:
+        key = engine_key(cfg)
+        with self._lock:
+            b = self._batchers.get(key)
+        if b is not None:
+            return b
+        # Build (or fetch) the engine OUTSIDE the server lock: the cache
+        # serializes builds per key, so a cold network never stalls
+        # submits for already-warm ones. The batcher holds its own engine
+        # reference, so cache eviction frees the slot without yanking an
+        # engine mid-flight.
+        engine = self.engines.get(cfg)
+        with self._lock:
+            b = self._batchers.get(key)
+            if b is None:  # we won (or were alone): register our batcher
+                b = MicroBatcher(engine, max_batch=self.max_batch,
+                                 window_ms=self.window_ms)
+                self._batchers[key] = b
+            return b
+
+    # ------------------------------------------------------------------
+
+    def submit(self, network, image):
+        """Non-blocking: route one (H, W, C) image to ``network``'s
+        batcher; returns a Future resolving to (classes,) logits."""
+        if self._closed:
+            raise RuntimeError("server is closed")
+        return self._batcher(self._resolve_cfg(network)).submit(image)
+
+    def run(self, network, image, timeout: float | None = 120.0):
+        """Blocking convenience: submit + await one request."""
+        return self.submit(network, image).result(timeout)
+
+    def warm(self, network) -> None:
+        """Build ``network``'s engine + batcher ahead of traffic (the
+        tune/jit cost moves out of the first request's latency)."""
+        self._batcher(self._resolve_cfg(network))
+
+    def close(self) -> None:
+        """Flush every batcher (pending requests still resolve)."""
+        self._closed = True
+        with self._lock:
+            batchers = list(self._batchers.values())
+        for b in batchers:
+            b.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # ------------------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Cache counters + per-network batcher aggregates."""
+        with self._lock:
+            per_net = {"/".join(map(str, k[:2])): b.stats()
+                       for k, b in self._batchers.items()}
+        return {"cache": self.engines.stats(), "networks": per_net}

@@ -1,0 +1,92 @@
+"""Bench-regression gate tests: tools/compare_bench.py must catch an
+injected xla fallback and a proxy slowdown, and stay quiet otherwise."""
+import copy
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+import compare_bench  # noqa: E402  (needs the tools/ path hook above)
+
+
+def _payload(algorithms=("ilpm", "pointwise"), proxy=(0.10, 0.05),
+             est=(1e-4, 5e-5)):
+    return {
+        "config": "resnet18-tiny",
+        "n_sites": len(algorithms),
+        "xla_sites": [n for n, a in zip("ab", algorithms) if a == "xla"],
+        "layers": [
+            {"layer": name, "algorithm": alg, "est_time_s": e,
+             "interpret_time_s": p}
+            for name, alg, e, p in zip("ab", algorithms, est, proxy)
+        ],
+    }
+
+
+def test_clean_comparison_passes():
+    base = _payload()
+    problems, _ = compare_bench.compare(base, copy.deepcopy(base))
+    assert problems == []
+
+
+def test_injected_xla_fallback_fails():
+    base = _payload()
+    cand = copy.deepcopy(base)
+    cand["layers"][0]["algorithm"] = "xla"
+    problems, _ = compare_bench.compare(base, cand)
+    assert any("xla escape hatch" in p for p in problems)
+
+
+def test_algorithm_change_between_tuned_kernels_is_allowed():
+    base = _payload()
+    cand = copy.deepcopy(base)
+    cand["layers"][0]["algorithm"] = "direct"  # tuner re-decided: fine
+    problems, notes = compare_bench.compare(base, cand)
+    assert problems == []
+    assert any("ilpm -> direct" in n for n in notes)
+
+
+def test_proxy_slowdown_beyond_tolerance_fails():
+    base = _payload()
+    cand = copy.deepcopy(base)
+    for l in cand["layers"]:
+        l["interpret_time_s"] *= 1.40  # > 25% default tolerance
+    problems, _ = compare_bench.compare(base, cand)
+    assert any("interpret-proxy" in p for p in problems)
+    # within tolerance: clean
+    for l in cand["layers"]:
+        l["interpret_time_s"] = l["interpret_time_s"] / 1.40 * 1.10
+    problems, _ = compare_bench.compare(base, cand)
+    assert problems == []
+
+
+def test_new_and_removed_layers_are_skipped_not_failed():
+    base = _payload()
+    cand = copy.deepcopy(base)
+    cand["layers"].append({"layer": "c", "algorithm": "xla",
+                           "est_time_s": 1.0, "interpret_time_s": 1.0})
+    problems, notes = compare_bench.compare(base, cand)
+    assert problems == []  # a *new* xla site isn't a regression of a
+    assert any("new layers" in n for n in notes)  # tuned one (CI's
+    # separate xla_sites assert still rejects it outright)
+
+
+def test_cli_exit_codes(tmp_path):
+    """The committed baseline vs itself exits 0; vs an injected xla
+    fallback exits 1 — what the CI self-check step relies on."""
+    baseline = REPO / "benchmarks" / "baseline" / "BENCH_conv.json"
+    injected = tmp_path / "injected.json"
+    d = json.loads(baseline.read_text())
+    d["layers"][0]["algorithm"] = "xla"
+    injected.write_text(json.dumps(d))
+    script = REPO / "tools" / "compare_bench.py"
+    ok = subprocess.run([sys.executable, str(script), str(baseline),
+                         str(baseline)], capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stderr
+    bad = subprocess.run([sys.executable, str(script), str(baseline),
+                          str(injected)], capture_output=True, text=True)
+    assert bad.returncode == 1
+    assert "xla escape hatch" in bad.stderr

@@ -1,0 +1,123 @@
+"""Compare a BENCH_conv.json against the committed baseline — the CI
+perf-regression gate.
+
+Usage:  python tools/compare_bench.py BASELINE CANDIDATE
+            [--proxy-tolerance 0.25] [--est-tolerance 0.10]
+
+Checks, over the layers present in BOTH files (new/removed layers are
+informational, so adding a network or a conv site never breaks the gate):
+
+  1. **algorithm regression** — any site that had a tuned (non-``xla``)
+     algorithm in the baseline but falls back to ``xla`` in the candidate
+     fails the build: a kernel or tuner change silently dropped a site
+     out of the paper's tuned path.
+  2. **cost-model regression** — total ``est_time_s`` (deterministic, no
+     machine noise) grew by more than ``--est-tolerance``.
+  3. **interpret-proxy regression** — total ``interpret_time_s`` (CPU
+     wall-clock of the chosen kernels, a noisy trend line) grew by more
+     than ``--proxy-tolerance``; sites missing a timing on either side
+     are skipped.
+
+Exit code 0 = clean (algorithm *changes* between tuned kernels are
+reported but allowed — the tuner is free to re-decide), 1 = regression.
+
+The proxy check compares wall-clock against a baseline measured on a
+(possibly different) machine, so it is the gate's noisiest leg: when the
+layer set or the CI runner class legitimately changes, refresh the
+committed baseline (``make bench-json && cp BENCH_conv.json
+benchmarks/baseline/``) rather than widening ``--proxy-tolerance``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _layers(payload: dict) -> dict:
+    return {l["layer"]: l for l in payload["layers"]}
+
+
+def compare(baseline: dict, candidate: dict, *, proxy_tolerance: float = 0.25,
+            est_tolerance: float = 0.10) -> tuple[list[str], list[str]]:
+    """-> (problems, notes). Nonempty problems means the gate fails."""
+    problems, notes = [], []
+    base, cand = _layers(baseline), _layers(candidate)
+    common = sorted(base.keys() & cand.keys())
+    if not common:
+        return ["no common layers between baseline and candidate"], notes
+    only_base = sorted(base.keys() - cand.keys())
+    only_cand = sorted(cand.keys() - base.keys())
+    if only_base:
+        notes.append(f"layers only in baseline (skipped): {only_base}")
+    if only_cand:
+        notes.append(f"new layers not in baseline (skipped): {only_cand}")
+
+    for name in common:
+        b_alg, c_alg = base[name]["algorithm"], cand[name]["algorithm"]
+        if c_alg == "xla" and b_alg != "xla":
+            problems.append(
+                f"{name}: tuned algorithm regressed to the xla escape "
+                f"hatch (baseline: {b_alg})")
+        elif b_alg != c_alg:
+            notes.append(f"{name}: algorithm changed {b_alg} -> {c_alg}")
+
+    def total(layers, field, names):
+        vals = [layers[n][field] for n in names]
+        return None if any(v is None for v in vals) else sum(vals)
+
+    b_est = total(base, "est_time_s", common)
+    c_est = total(cand, "est_time_s", common)
+    if b_est and c_est is not None and c_est > b_est * (1 + est_tolerance):
+        problems.append(
+            f"cost-model total est_time regressed "
+            f"{c_est / b_est - 1:+.1%} (> {est_tolerance:.0%} allowed): "
+            f"{b_est:.3e}s -> {c_est:.3e}s")
+
+    timed = [n for n in common
+             if base[n].get("interpret_time_s") is not None
+             and cand[n].get("interpret_time_s") is not None]
+    if timed:
+        b_t = sum(base[n]["interpret_time_s"] for n in timed)
+        c_t = sum(cand[n]["interpret_time_s"] for n in timed)
+        if b_t and c_t > b_t * (1 + proxy_tolerance):
+            problems.append(
+                f"interpret-proxy total regressed {c_t / b_t - 1:+.1%} "
+                f"(> {proxy_tolerance:.0%} allowed): "
+                f"{b_t:.3f}s -> {c_t:.3f}s over {len(timed)} layers")
+        else:
+            notes.append(
+                f"interpret-proxy total {c_t / b_t - 1:+.1%} vs baseline "
+                f"over {len(timed)} layers")
+    return problems, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("candidate")
+    ap.add_argument("--proxy-tolerance", type=float, default=0.25,
+                    help="allowed fractional interpret-proxy slowdown")
+    ap.add_argument("--est-tolerance", type=float, default=0.10,
+                    help="allowed fractional cost-model est_time growth")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.candidate) as f:
+        candidate = json.load(f)
+    problems, notes = compare(baseline, candidate,
+                              proxy_tolerance=args.proxy_tolerance,
+                              est_tolerance=args.est_tolerance)
+    for n in notes:
+        print(f"note: {n}")
+    for p in problems:
+        print(f"REGRESSION: {p}", file=sys.stderr)
+    if problems:
+        return 1
+    print(f"bench comparison clean: {len(candidate['layers'])} candidate "
+          f"layers vs {len(baseline['layers'])} baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
