@@ -43,6 +43,19 @@ bench-compare:
 bench-serving:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/run.py --serve BENCH_serving.json
 
+# Multi-stream deadline bench: K simulated-clock 30 fps streams (engine
+# leases) + on-demand classify contention -> BENCH_streaming.json.
+.PHONY: bench-streaming
+bench-streaming:
+	PYTHONPATH=src:. $(PYTHON) benchmarks/run.py --stream BENCH_streaming.json
+
+# Gate the fresh BENCH_streaming.json against the committed baseline:
+# fails if any scenario's deadline-miss or frame-drop rate regresses
+# (the simulated-clock numbers are deterministic; tolerance is 0).
+.PHONY: bench-compare-streaming
+bench-compare-streaming:
+	$(PYTHON) tools/compare_bench.py benchmarks/baseline/BENCH_streaming.json BENCH_streaming.json
+
 # Validate every local link/anchor in README.md and docs/ (CI step).
 .PHONY: docs-check
 docs-check:

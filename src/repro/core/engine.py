@@ -26,6 +26,7 @@ off-chip traffic dominates edge energy).
 from __future__ import annotations
 
 import functools
+import warnings
 from dataclasses import dataclass
 
 import jax
@@ -95,6 +96,17 @@ class InferenceEngine:
             lambda params, images, winograd_u=None: jax.lax.map(
                 lambda im: fwd1(params, images=im[None],
                                 winograd_u=winograd_u)[0], images))
+        # Streaming entry: the same single-image computation as `run`,
+        # jitted with the frame buffer DONATED. A StreamSession
+        # device_puts frame t+1 into a fresh slot while frame t computes
+        # (double-buffering), and donation lets XLA reuse frame t's input
+        # buffer instead of allocating per frame. On backends where no
+        # output can alias the frame (CPU; logits are far smaller than
+        # the image) XLA declines the donation with a UserWarning —
+        # benign, so it's filtered rather than spamming every stream.
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        self._fwd_stream = jax.jit(fwd1, donate_argnames=("images",))
 
     # ------------------------------------------------------------------
     # plan construction
@@ -190,6 +202,30 @@ class InferenceEngine:
         """
         return self._fwd_batch(self.params, images,
                                winograd_u=self.winograd_u or None)
+
+    def device_put_frame(self, image):
+        """Start the async host→device transfer of one streaming frame;
+        returns the (1, H, W, C) device buffer for ``run_stream``.
+
+        Called at frame *arrival* (on the producer thread), so the
+        transfer overlaps the in-flight frame's compute — the streaming
+        double-buffer. ``image`` is (H, W, C) or already (1, H, W, C).
+        """
+        if getattr(image, "ndim", 3) == 3:
+            image = image[None]
+        return jax.device_put(image)
+
+    def run_stream(self, frames):
+        """One streaming frame -> logits (classes,).
+
+        ``frames`` is the (1, H, W, C) device buffer from
+        ``device_put_frame``; it is **donated** — dead after this call —
+        so callers must hand in a fresh buffer per frame (the session's
+        double-buffered slots do). Numerics are identical to ``run``:
+        same forward, same tuned per-layer plan, same epilogues.
+        """
+        return self._fwd_stream(self.params, images=frames,
+                                winograd_u=self.winograd_u or None)[0]
 
     def trace_count(self):
         """Number of distinct shapes the batch forward has been traced

@@ -5,13 +5,23 @@ process; ``MicroBatcher`` coalesces concurrent requests within a deadline
 window into one padded-batch dispatch (batch-1 traffic keeps the paper's
 single-image fast path); ``EngineCache`` LRU-caches built engines keyed by
 (network, input_size, device, dtype) and reuses tuned plans across
-variants. See docs/serving.md for the request lifecycle.
+variants; ``StreamSession`` (``Server.open_stream``) serves fixed-rate
+frame streams over per-stream engine leases with double-buffered frames,
+a skip-to-latest drop policy, and per-frame deadline accounting. See
+docs/serving.md for the request and session lifecycles.
 """
 from repro.serving.batcher import MicroBatcher, bucket  # noqa: F401
 from repro.serving.engine_cache import (  # noqa: F401
     EngineCache,
+    EngineLease,
     engine_key,
     plan_key,
 )
 from repro.serving.request import Request  # noqa: F401
 from repro.serving.server import Server  # noqa: F401
+from repro.serving.streaming import (  # noqa: F401
+    Frame,
+    FrameDropped,
+    StreamScheduler,
+    StreamSession,
+)

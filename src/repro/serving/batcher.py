@@ -51,13 +51,25 @@ class MicroBatcher:
     """
 
     def __init__(self, engine, *, max_batch: int = 8, window_ms: float = 2.0,
-                 pad_batches: bool = True):
+                 pad_batches: bool = True, deadline_ms: float | None = None):
         assert max_batch >= 1
         self.engine = engine
-        self.max_batch = max_batch
+        # power-of-two invariant: bucket() pads to powers of two, so a
+        # non-power-of-two cap would add one extra traced batch shape
+        # (the clipped max_batch itself); round down at construction so
+        # the traced-shape set stays exactly {1, 2, 4, ..., max_batch}
+        self.max_batch = 1 << (max_batch.bit_length() - 1)
         self.window_s = window_ms / 1e3
+        # per-request latency SLO (submit -> resolution); None = no SLO.
+        # stats() reports misses against it — the same deadline telemetry
+        # streaming sessions expose, for on-demand traffic.
+        self.deadline_s = None if deadline_ms is None else deadline_ms / 1e3
         self.pad_batches = pad_batches
         self.dispatches: list[dict] = []  # {batch, padded, latencies}
+        # the loop thread appends to the dispatch log while stats() reads
+        # it from caller threads: every access goes through this lock
+        self._stats_lock = threading.Lock()
+        self._causes = {"full": 0, "window": 0, "drain": 0}
         self._queue: queue.Queue = queue.Queue()
         self._closed = False
         self._thread = threading.Thread(target=self._loop, daemon=True,
@@ -113,6 +125,11 @@ class MicroBatcher:
                     stopping = True
                     break
                 batch.append(nxt)
+            cause = ("drain" if stopping
+                     else "full" if len(batch) >= self.max_batch
+                     else "window")
+            with self._stats_lock:
+                self._causes[cause] += 1
             self._dispatch(batch)
         # a submit racing close() can enqueue behind the _STOP sentinel;
         # fail those requests instead of leaving their futures unresolved
@@ -146,18 +163,24 @@ class MicroBatcher:
             return
         for r, o in zip(batch, outs):
             req_mod.resolve(r, o)
-        self.dispatches.append({
-            "batch": len(batch),
-            "padded": len(batch) if len(batch) == 1 else padded,
-            "latencies": [r.latency for r in batch],
-        })
+        with self._stats_lock:
+            self.dispatches.append({
+                "batch": len(batch),
+                "padded": len(batch) if len(batch) == 1 else padded,
+                "latencies": [r.latency for r in batch],
+            })
 
     # ------------------------------------------------------------------
 
     def stats(self) -> dict:
         """Dispatch-log aggregates: request count, batch-size histogram,
-        latency mean/p50/p95/max (seconds, submit -> future resolution)."""
-        lats = sorted(l for d in self.dispatches for l in d["latencies"])
+        latency mean/p50/p95/max (seconds, submit -> future resolution),
+        live queue depth, dispatch causes (full batch vs expired window
+        vs shutdown drain), and deadline misses if an SLO is set."""
+        with self._stats_lock:  # snapshot: the loop thread appends live
+            dispatches = list(self.dispatches)
+            causes = dict(self._causes)
+        lats = sorted(l for d in dispatches for l in d["latencies"])
 
         def pct(q):
             if not lats:
@@ -165,12 +188,22 @@ class MicroBatcher:
             return lats[min(len(lats) - 1, round(q / 100 * (len(lats) - 1)))]
 
         hist: dict[int, int] = {}
-        for d in self.dispatches:
+        for d in dispatches:
             hist[d["batch"]] = hist.get(d["batch"], 0) + 1
+        misses = (None if self.deadline_s is None
+                  else sum(1 for l in lats if l > self.deadline_s))
         return {
             "requests": len(lats),
-            "dispatches": len(self.dispatches),
+            "dispatches": len(dispatches),
+            "queue_depth": self._queue.qsize(),
+            "window_ms": self.window_s * 1e3,
+            "dispatch_causes": causes,
             "batch_histogram": dict(sorted(hist.items())),
+            "deadline_ms": (None if self.deadline_s is None
+                            else self.deadline_s * 1e3),
+            "deadline_misses": misses,
+            "deadline_miss_rate": (None if misses is None or not lats
+                                   else misses / len(lats)),
             "latency_mean_s": sum(lats) / len(lats) if lats else None,
             "latency_p50_s": pct(50),
             "latency_p95_s": pct(95),

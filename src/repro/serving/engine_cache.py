@@ -11,6 +11,12 @@ Plans are cached separately, keyed by ``(network, input_size)`` only: a
 to algorithm + block parameters for a conv *geometry*), so a bf16 engine
 deployed next to an f32 one reuses the tuned plan instead of re-tuning —
 the engine's existing ``plan=`` constructor hook makes this free.
+
+Streaming sessions hold **leases** (``lease``): a leased entry is pinned —
+it does not count against ``capacity`` and LRU eviction skips it — so a
+burst of classify traffic for other networks can never evict the engine
+out from under a live stream. Releasing the lease returns the entry to
+normal LRU order as most-recently-used.
 """
 from __future__ import annotations
 
@@ -38,6 +44,36 @@ def plan_key(cfg) -> tuple:
     return (cfg.name, cfg.extra.get("img"))
 
 
+class EngineLease:
+    """A pin on one cache entry, held by a ``StreamSession`` for its
+    lifetime: while any lease on the key is live, the engine is exempt
+    from LRU eviction (and from the capacity count). ``release`` — or
+    exiting the context manager — drops the pin and restores the entry to
+    normal LRU order as most-recently-used."""
+
+    def __init__(self, cache: "EngineCache", key: tuple,
+                 engine: InferenceEngine):
+        self._cache = cache
+        self.key = key
+        self.engine = engine
+        self._released = False
+
+    @property
+    def released(self) -> bool:
+        return self._released
+
+    def release(self) -> None:
+        if not self._released:
+            self._released = True
+            self._cache._release(self.key)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+
+
 class EngineCache:
     """Thread-safe LRU of InferenceEngines; hit returns the *identical*
     engine object (same jitted forward, same params, same plan)."""
@@ -50,9 +86,11 @@ class EngineCache:
         self._plans: dict[tuple, object] = {}
         self._lock = threading.RLock()
         self._build_locks: dict[tuple, threading.Lock] = {}
+        self._pins: dict[tuple, int] = {}  # key -> live lease count
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.leases = 0
 
     def __len__(self) -> int:
         return len(self._engines)
@@ -95,15 +133,53 @@ class EngineCache:
                 self.misses += 1
                 self._plans.setdefault(pkey, eng.plan)
                 self._engines[key] = eng
-                while len(self._engines) > self.capacity:
-                    self._engines.popitem(last=False)  # least recently used
-                    self.evictions += 1
+                self._evict_locked()
                 self._build_locks.pop(key, None)
             return eng
+
+    def lease(self, cfg, *, params=None, seed: int = 0) -> EngineLease:
+        """Pin ``cfg``'s engine for a streaming session (building on miss).
+
+        Pinned entries are exempt from eviction and from the capacity
+        count; ``EngineLease.release`` unpins. Re-leasing the same key
+        stacks (the entry stays pinned until every lease is released).
+        """
+        key = engine_key(cfg)
+        while True:
+            eng = self.get(cfg, params=params, seed=seed)
+            with self._lock:
+                # an eviction may race between get() and the pin; only
+                # pin the entry if it is still the one we were handed
+                if self._engines.get(key) is eng:
+                    self._pins[key] = self._pins.get(key, 0) + 1
+                    self.leases += 1
+                    return EngineLease(self, key, eng)
+
+    def _release(self, key: tuple) -> None:
+        with self._lock:
+            n = self._pins.get(key, 0) - 1
+            if n > 0:
+                self._pins[key] = n
+            else:
+                self._pins.pop(key, None)
+            if key in self._engines:
+                self._engines.move_to_end(key)  # back to LRU order, as MRU
+            self._evict_locked()
+
+    def _evict_locked(self) -> None:
+        """Evict oldest unpinned entries until the unpinned population
+        fits ``capacity`` (call with the lock held). Pinned entries ride
+        outside the capacity count — they cannot be evicted, and they
+        must not starve the unpinned working set either."""
+        unpinned = [k for k in self._engines if not self._pins.get(k)]
+        for k in unpinned[:max(0, len(unpinned) - self.capacity)]:
+            del self._engines[k]
+            self.evictions += 1
 
     def stats(self) -> dict:
         with self._lock:
             return {"capacity": self.capacity, "size": len(self._engines),
                     "hits": self.hits, "misses": self.misses,
-                    "evictions": self.evictions,
+                    "evictions": self.evictions, "leases": self.leases,
+                    "pinned": [k for k in self._engines if self._pins.get(k)],
                     "keys": list(self._engines)}

@@ -3,10 +3,14 @@
 One ``Server`` owns one ``EngineCache`` (shared across every network it
 serves) and one ``MicroBatcher`` per active network. ``submit`` routes a
 request to its network's batcher — building the engine through the cache
-on first sight — and returns immediately with a Future. This is the seam
-every future scaling layer (sharding, multi-backend, continuous batching)
-plugs into: everything above it speaks (network, image) -> logits,
-everything below it is the tuned-engine world.
+on first sight — and returns immediately with a Future. ``open_stream``
+opens a fixed-rate ``StreamSession`` over the same cache: the session
+holds an engine lease (pinned against eviction) and its dispatch runs on
+its own thread, so K live streams and on-demand classify traffic share
+one cache without head-of-line blocking. This is the seam every future
+scaling layer (sharding, multi-backend, continuous batching) plugs into:
+everything above it speaks (network, image) -> logits, everything below
+it is the tuned-engine world.
 """
 from __future__ import annotations
 
@@ -14,6 +18,7 @@ import threading
 
 from repro.serving.batcher import MicroBatcher
 from repro.serving.engine_cache import EngineCache, engine_key
+from repro.serving.streaming import StreamSession
 
 
 class Server:
@@ -27,13 +32,16 @@ class Server:
 
     def __init__(self, *, cache: EngineCache | None = None, capacity: int = 4,
                  tune_mode: str = "cost_model", max_batch: int = 8,
-                 window_ms: float = 2.0, tiny: bool = False):
+                 window_ms: float = 2.0, deadline_ms: float | None = None,
+                 tiny: bool = False):
         self.engines = cache if cache is not None else EngineCache(
             capacity=capacity, tune_mode=tune_mode)
         self.max_batch = max_batch
         self.window_ms = window_ms
+        self.deadline_ms = deadline_ms  # per-request SLO for on-demand stats
         self.tiny = tiny
         self._batchers: dict[tuple, MicroBatcher] = {}
+        self._streams: list[StreamSession] = []
         self._lock = threading.Lock()
         self._closed = False
 
@@ -63,7 +71,8 @@ class Server:
             b = self._batchers.get(key)
             if b is None:  # we won (or were alone): register our batcher
                 b = MicroBatcher(engine, max_batch=self.max_batch,
-                                 window_ms=self.window_ms)
+                                 window_ms=self.window_ms,
+                                 deadline_ms=self.deadline_ms)
                 self._batchers[key] = b
             return b
 
@@ -85,11 +94,42 @@ class Server:
         tune/jit cost moves out of the first request's latency)."""
         self._batcher(self._resolve_cfg(network))
 
+    def open_stream(self, network, *, fps: float = 30.0,
+                    deadline_ms: float | None = None,
+                    sim_compute_s: float | None = None,
+                    phase_s: float = 0.0,
+                    name: str | None = None) -> StreamSession:
+        """Open a fixed-rate frame stream on ``network``.
+
+        The session leases the engine from the shared cache — pinned
+        against LRU eviction until the session closes — and dispatches on
+        its own thread (or synchronously, under the simulated clock when
+        ``sim_compute_s`` is set), so streams never head-of-line-block
+        each other or the on-demand batchers. Closing the server closes
+        every still-open session.
+        """
+        if self._closed:
+            raise RuntimeError("server is closed")
+        cfg = self._resolve_cfg(network)
+        lease = self.engines.lease(cfg)
+        with self._lock:
+            if name is None:
+                name = f"{cfg.name}#{len(self._streams)}"
+            session = StreamSession(lease, fps=fps, deadline_ms=deadline_ms,
+                                    sim_compute_s=sim_compute_s,
+                                    phase_s=phase_s, name=name)
+            self._streams.append(session)
+            return session
+
     def close(self) -> None:
-        """Flush every batcher (pending requests still resolve)."""
+        """Flush every batcher and stream (pending requests and frames
+        still resolve; stream leases are released)."""
         self._closed = True
         with self._lock:
             batchers = list(self._batchers.values())
+            streams = list(self._streams)
+        for s in streams:
+            s.close()
         for b in batchers:
             b.close()
 
@@ -102,8 +142,11 @@ class Server:
     # ------------------------------------------------------------------
 
     def stats(self) -> dict:
-        """Cache counters + per-network batcher aggregates."""
+        """Cache counters, per-network batcher aggregates (queue depth,
+        dispatch causes, deadline telemetry), per-stream deadline stats."""
         with self._lock:
             per_net = {"/".join(map(str, k[:2])): b.stats()
                        for k, b in self._batchers.items()}
-        return {"cache": self.engines.stats(), "networks": per_net}
+            streams = {s.name: s.stats() for s in self._streams}
+        return {"cache": self.engines.stats(), "networks": per_net,
+                "streams": streams}

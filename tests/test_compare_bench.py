@@ -74,6 +74,84 @@ def test_new_and_removed_layers_are_skipped_not_failed():
     # separate xla_sites assert still rejects it outright)
 
 
+def _stream_payload(steady_miss=0.0, overload_miss=0.8, drop_rate=0.3):
+    def scenario(miss, drops):
+        return {"sim_compute_ms": 8.0,
+                "aggregate": {"frames": 180, "completed": 150,
+                              "dropped": int(drops * 180),
+                              "drop_rate": drops,
+                              "deadline_misses": int(miss * 180),
+                              "deadline_miss_rate": miss}}
+    return {"kind": "streaming",
+            "scenarios": {"steady": scenario(steady_miss, 0.0),
+                          "overload": scenario(overload_miss, drop_rate)}}
+
+
+def test_streaming_clean_comparison_passes():
+    base = _stream_payload()
+    problems, _ = compare_bench.compare_streaming(base, copy.deepcopy(base))
+    assert problems == []
+
+
+def test_streaming_miss_rate_regression_fails():
+    base = _stream_payload()
+    cand = _stream_payload(steady_miss=0.2)
+    problems, _ = compare_bench.compare_streaming(base, cand)
+    assert any("steady: deadline_miss_rate regressed" in p for p in problems)
+
+
+def test_streaming_drop_rate_regression_fails_and_tolerance():
+    base = _stream_payload()
+    cand = _stream_payload(drop_rate=0.4)
+    problems, _ = compare_bench.compare_streaming(base, cand)
+    assert any("overload: drop_rate regressed" in p for p in problems)
+    problems, notes = compare_bench.compare_streaming(
+        base, cand, miss_tolerance=0.2)
+    assert problems == []  # within the loosened tolerance: noted, not fatal
+    assert any("drop_rate changed" in n for n in notes)
+
+
+def test_streaming_improvement_is_noted_not_failed():
+    base = _stream_payload(overload_miss=0.8)
+    cand = _stream_payload(overload_miss=0.5)
+    problems, notes = compare_bench.compare_streaming(base, cand)
+    assert problems == []
+    assert any("deadline_miss_rate changed" in n for n in notes)
+
+
+def test_streaming_cli_detects_kind_and_gates(tmp_path):
+    """The CLI auto-detects streaming payloads, exits 1 on a miss-rate
+    regression or an artifact-kind mismatch, 0 on a clean match."""
+    script = REPO / "tools" / "compare_bench.py"
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(_stream_payload()))
+    ok = subprocess.run([sys.executable, str(script), str(base), str(base)],
+                        capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stderr
+    assert "2 scenarios" in ok.stdout
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(_stream_payload(steady_miss=0.5)))
+    r = subprocess.run([sys.executable, str(script), str(base), str(bad)],
+                       capture_output=True, text=True)
+    assert r.returncode == 1 and "deadline_miss_rate regressed" in r.stderr
+    conv = REPO / "benchmarks" / "baseline" / "BENCH_conv.json"
+    mixed = subprocess.run([sys.executable, str(script), str(base),
+                            str(conv)], capture_output=True, text=True)
+    assert mixed.returncode == 1
+    assert "different artifact kinds" in mixed.stderr
+
+
+def test_streaming_committed_baseline_vs_itself_is_clean():
+    baseline = REPO / "benchmarks" / "baseline" / "BENCH_streaming.json"
+    d = json.loads(baseline.read_text())
+    problems, _ = compare_bench.compare_streaming(d, copy.deepcopy(d))
+    assert problems == []
+    # the committed steady scenario must hold a zero miss rate: that is
+    # the invariant the CI gate pins
+    assert d["scenarios"]["steady"]["aggregate"]["deadline_miss_rate"] == 0.0
+    assert d["scenarios"]["overload"]["aggregate"]["dropped"] > 0
+
+
 def test_cli_exit_codes(tmp_path):
     """The committed baseline vs itself exits 0; vs an injected xla
     fallback exits 1 — what the CI self-check step relies on."""

@@ -1,0 +1,311 @@
+"""Streaming subsystem tests: per-stream engine leases, StreamSession
+deadline accounting under the simulated clock, skip-to-latest frame
+drops, the multi-stream scheduler sharing one cache with classify
+traffic, and the batcher telemetry satellites.
+
+The correctness bar mirrors serving's: per-frame outputs must be
+*bitwise-equal* to sequential ``engine.run`` calls (streaming changes
+scheduling and memory traffic, never numerics), deadline misses must be
+zero when compute is faster than the frame period and nonzero — with
+skip-to-latest engaging — when it is artificially slowed, and a leased
+engine must survive LRU pressure for the lease's lifetime.
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get, tiny_variant
+from repro.serving import (
+    EngineCache,
+    FrameDropped,
+    MicroBatcher,
+    Server,
+    StreamScheduler,
+    StreamSession,
+    engine_key,
+)
+
+KEY = jax.random.key(11)
+RESNET = tiny_variant(get("resnet18"))
+MOBILENET = tiny_variant(get("mobilenet_v2"))
+
+
+def _images(n, size=32):
+    return [jax.random.normal(jax.random.fold_in(KEY, i), (size, size, 3))
+            for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def cache():
+    """One shared cache for the session tests (engines build once)."""
+    return EngineCache(capacity=4)
+
+
+# ----------------------------------------------------------------------
+# engine leases
+
+
+def test_lease_pins_entry_against_eviction():
+    """A leased engine rides outside the capacity count: LRU pressure
+    evicts around it, never through it; release rejoins LRU order as MRU."""
+    cache = EngineCache(capacity=1)
+    lease = cache.lease(RESNET)
+    cache.get(MOBILENET)  # would evict the resnet engine without the pin
+    assert RESNET in cache and MOBILENET in cache
+    assert cache.evictions == 0
+    assert cache.get(RESNET) is lease.engine  # still the identical engine
+    bf16 = RESNET.replace(param_dtype="bfloat16")
+    cache.get(bf16)  # second *unpinned* entry: evicts mobilenet, not resnet
+    assert cache.evictions == 1
+    assert MOBILENET not in cache and RESNET in cache and bf16 in cache
+    assert cache.stats()["pinned"] == [engine_key(RESNET)]
+    lease.release()  # back to normal LRU order, as most-recently-used...
+    assert cache.stats()["pinned"] == []
+    assert RESNET in cache and bf16 not in cache  # ...so bf16 was oldest
+    cache.get(MOBILENET)  # now unpinned resnet is evictable again
+    assert RESNET not in cache
+    assert lease.released
+
+
+def test_lease_stacks_and_context_manager():
+    cache = EngineCache(capacity=1)
+    with cache.lease(RESNET) as l1:
+        with cache.lease(RESNET) as l2:
+            assert l2.engine is l1.engine
+            assert cache.leases == 2
+        assert cache.stats()["pinned"] == [engine_key(RESNET)]  # l1 holds
+    assert cache.stats()["pinned"] == []
+
+
+def test_lease_held_classify_for_other_network_progresses(cache):
+    """Satellite: a held stream lease never blocks classify submits for
+    other networks — builds run under per-key locks, dispatch on the
+    batcher's own thread."""
+    lease = cache.lease(RESNET)
+    try:
+        img = _images(1)[0]
+        with Server(cache=cache, tiny=True, window_ms=1.0) as server:
+            out = server.run("mobilenet_v2", img, timeout=600)
+        truth = cache.get(MOBILENET).run(img)
+        assert np.array_equal(np.asarray(truth), np.asarray(out))
+    finally:
+        lease.release()
+
+
+# ----------------------------------------------------------------------
+# StreamSession: simulated clock (deterministic deadline accounting)
+
+
+def test_stream_sim_fast_compute_zero_misses_bitwise(cache):
+    """Compute faster than the frame period -> every frame completes on
+    time, outputs bitwise-equal to sequential engine.run calls."""
+    eng = cache.get(RESNET)
+    imgs = _images(8)
+    truth = [np.asarray(eng.run(im)) for im in imgs]
+    s = StreamSession(cache.lease(RESNET), fps=30.0, sim_compute_s=0.005,
+                      name="fast")
+    with s:
+        frames = [s.submit_frame(im) for im in imgs]
+        s.flush()
+        outs = [np.asarray(f.future.result(timeout=600)) for f in frames]
+    st = s.stats()
+    assert st["frames"] == 8 and st["completed"] == 8
+    assert st["dropped"] == 0
+    assert st["deadline_misses"] == 0 and st["deadline_miss_rate"] == 0.0
+    for t, o in zip(truth, outs):
+        assert np.array_equal(t, o)  # bitwise, not allclose
+    for k, f in enumerate(frames):  # auto-paced arrivals, exact sim stamps
+        assert f.arrival == pytest.approx(k / 30.0)
+        assert f.dispatch == f.arrival  # device always idle by arrival
+        assert f.done == f.dispatch + 0.005
+        assert f.missed is False
+
+
+def test_stream_sim_slow_compute_drops_and_misses(cache):
+    """Compute slower than the frame period -> skip-to-latest engages
+    (stale frames dropped, freshest kept) and the miss rate is nonzero;
+    frames that do complete are still bitwise-correct."""
+    eng = cache.get(RESNET)
+    imgs = _images(10)
+    truth = [np.asarray(eng.run(im)) for im in imgs]
+    s = StreamSession(cache.lease(RESNET), fps=30.0, sim_compute_s=0.08,
+                      name="slow")
+    frames = [s.submit_frame(im) for im in imgs]
+    s.close()  # flushes the pending slot
+    st = s.stats()
+    assert st["frames"] == 10
+    assert st["dropped"] > 0  # skip-to-latest engaged
+    assert st["deadline_misses"] > 0 and st["deadline_miss_rate"] > 0
+    assert st["completed"] + st["dropped"] == 10
+    assert not frames[-1].dropped  # the freshest frame always survives
+    completed = [f for f in frames if not f.dropped]
+    for f in completed:
+        assert f.done > f.deadline  # 80 ms compute vs 33 ms deadline
+        assert np.array_equal(truth[f.seq],
+                              np.asarray(f.future.result(timeout=600)))
+    dropped = next(f for f in frames if f.dropped)
+    with pytest.raises(FrameDropped):
+        dropped.future.result(timeout=600)
+
+
+def test_stream_submit_after_close_raises(cache):
+    s = StreamSession(cache.lease(RESNET), fps=30.0, sim_compute_s=0.005)
+    s.close()
+    with pytest.raises(RuntimeError):
+        s.submit_frame(_images(1)[0])
+
+
+# ----------------------------------------------------------------------
+# StreamSession: threaded (wall-clock) mode
+
+
+def test_stream_threaded_completes_bitwise(cache):
+    """The deployment shape: a dispatch thread, wall-clock stamps. Paced
+    submissions with a generous deadline complete without drops/misses."""
+    eng = cache.get(RESNET)
+    imgs = _images(3)
+    truth = [np.asarray(eng.run(im)) for im in imgs]
+    with StreamSession(cache.lease(RESNET), fps=5.0, deadline_ms=60_000.0,
+                       name="rt") as s:
+        frames = []
+        for im in imgs:
+            frames.append(s.submit_frame(im))
+            s.flush()  # pace the producer: wait out each frame's compute
+        outs = [np.asarray(f.future.result(timeout=600)) for f in frames]
+    st = s.stats()
+    assert st["completed"] == 3 and st["dropped"] == 0
+    assert st["deadline_misses"] == 0
+    for t, o in zip(truth, outs):
+        assert np.array_equal(t, o)
+
+
+def test_stream_threaded_skip_to_latest_when_slowed(cache, monkeypatch):
+    """Artificially slow the engine: frames queued behind the in-flight
+    compute are dropped except the newest (skip-to-latest)."""
+    lease = cache.lease(RESNET)
+    real = lease.engine.run_stream
+    monkeypatch.setattr(lease.engine, "run_stream",
+                        lambda buf: (time.sleep(0.15), real(buf))[1])
+    with StreamSession(lease, fps=60.0, name="rt-slow") as s:
+        frames = [s.submit_frame(im) for im in _images(5)]
+        s.flush()
+    st = s.stats()
+    assert st["dropped"] >= 1  # the burst outran the slowed compute
+    assert st["deadline_misses"] >= st["dropped"]
+    assert not frames[-1].dropped  # freshest frame survived
+    assert frames[-1].future.result(timeout=600) is not None
+
+
+# ----------------------------------------------------------------------
+# acceptance: 4 x 30 fps streams + classify through one shared cache
+
+
+def test_four_streams_30fps_share_cache_with_classify():
+    """The issue's acceptance scenario: 4 concurrent 30 fps simulated
+    streams (2 networks, phase-staggered, per-stream leases) share one
+    engine cache with on-demand classify traffic; every frame and every
+    classify output is bitwise-equal to sequential engine.run calls and
+    every stream holds a zero deadline-miss rate."""
+    imgs = _images(6)
+    nets = ["resnet18", "mobilenet_v2", "resnet18", "mobilenet_v2"]
+    with Server(tiny=True, max_batch=4, window_ms=5.0,
+                deadline_ms=60_000.0) as server:
+        for net in set(nets):
+            server.warm(net)
+        truth = {net: [np.asarray(server.engines.get(
+            tiny_variant(get(net))).run(im)) for im in imgs]
+            for net in set(nets)}
+        streams = [server.open_stream(net, fps=30.0, sim_compute_s=0.002,
+                                      phase_s=0.002 * i)
+                   for i, net in enumerate(nets)]
+        classify_futs = []
+
+        def classify_client():
+            for i, im in enumerate(imgs):
+                for net in ("resnet18", "mobilenet_v2"):
+                    classify_futs.append((net, i, server.submit(net, im)))
+
+        client = threading.Thread(target=classify_client)
+        client.start()
+        frames = StreamScheduler(streams).run(len(imgs),
+                                              lambda i, k: imgs[k])
+        client.join()
+
+        for i, per_stream in enumerate(frames):
+            st = streams[i].stats()
+            assert st["frames"] == len(imgs) and st["dropped"] == 0
+            assert st["deadline_misses"] == 0
+            for k, f in enumerate(per_stream):
+                assert np.array_equal(
+                    truth[nets[i]][k],
+                    np.asarray(f.future.result(timeout=600)))
+        for net, i, fut in classify_futs:
+            assert np.array_equal(truth[net][i],
+                                  np.asarray(fut.result(timeout=600)))
+
+        stats = server.stats()
+        assert stats["cache"]["misses"] == 2  # one build per network
+        assert len(stats["streams"]) == 4
+        assert set(stats["cache"]["pinned"]) == {
+            engine_key(tiny_variant(get(n))) for n in set(nets)}
+        # satellite: on-demand traffic exposes the same deadline telemetry
+        for b in stats["networks"].values():
+            assert b["queue_depth"] == 0
+            assert sum(b["dispatch_causes"].values()) == b["dispatches"]
+            assert b["deadline_ms"] == 60_000.0
+            assert b["deadline_misses"] == 0
+            assert b["deadline_miss_rate"] == 0.0
+    assert server.engines.stats()["pinned"] == []  # close released leases
+
+
+# ----------------------------------------------------------------------
+# batcher satellites
+
+
+def test_batcher_max_batch_rounds_down_to_power_of_two(cache):
+    """Satellite: a non-power-of-two max_batch would add one extra traced
+    batch shape (the clipped cap); the batcher rounds down instead."""
+    eng = cache.get(RESNET)
+    with MicroBatcher(eng, max_batch=6, window_ms=1.0) as b:
+        assert b.max_batch == 4
+    with MicroBatcher(eng, max_batch=8, window_ms=1.0) as b:
+        assert b.max_batch == 8
+    with MicroBatcher(eng, max_batch=1, window_ms=1.0) as b:
+        assert b.max_batch == 1
+
+
+def test_batcher_stats_concurrent_with_traffic(cache):
+    """Satellite: stats() snapshots the dispatch log under a lock, so a
+    caller thread hammering it during live traffic never races the loop
+    thread's appends."""
+    eng = cache.get(RESNET)
+    errors = []
+    with MicroBatcher(eng, max_batch=4, window_ms=5.0,
+                      deadline_ms=60_000.0) as b:
+        stop = threading.Event()
+
+        def poll():
+            while not stop.is_set():
+                try:
+                    b.stats()
+                except Exception as e:  # pragma: no cover - the regression
+                    errors.append(e)
+                    return
+
+        poller = threading.Thread(target=poll)
+        poller.start()
+        futs = [b.submit(im) for im in _images(6)]
+        for f in futs:
+            f.result(timeout=600)
+        stop.set()
+        poller.join()
+        st = b.stats()
+    assert errors == []
+    assert st["requests"] == 6
+    assert st["queue_depth"] == 0
+    assert sum(st["dispatch_causes"].values()) == st["dispatches"]
+    assert st["deadline_ms"] == 60_000.0
+    assert st["deadline_misses"] == 0 and st["deadline_miss_rate"] == 0.0

@@ -1,8 +1,19 @@
-"""Compare a BENCH_conv.json against the committed baseline — the CI
+"""Compare a bench artifact against the committed baseline — the CI
 perf-regression gate.
 
 Usage:  python tools/compare_bench.py BASELINE CANDIDATE
             [--proxy-tolerance 0.25] [--est-tolerance 0.10]
+            [--miss-tolerance 0.0]
+
+Two artifact kinds are accepted, auto-detected from the payload:
+
+  * **conv** (``BENCH_conv.json``, has ``layers``) — the per-layer
+    algorithm/cost gate described below;
+  * **streaming** (``BENCH_streaming.json``, has ``scenarios``) — the
+    deadline gate: per scenario, the simulated-clock deadline-miss rate
+    and frame-drop rate must not exceed the baseline by more than
+    ``--miss-tolerance`` (absolute; the simulation is deterministic, so
+    the default tolerance is 0).
 
 Checks, over the layers present in BOTH files (new/removed layers are
 informational, so adding a network or a conv site never breaks the gate):
@@ -92,6 +103,42 @@ def compare(baseline: dict, candidate: dict, *, proxy_tolerance: float = 0.25,
     return problems, notes
 
 
+def compare_streaming(baseline: dict, candidate: dict, *,
+                      miss_tolerance: float = 0.0) -> tuple[list[str],
+                                                            list[str]]:
+    """Streaming-artifact gate: per-scenario deadline-miss / frame-drop
+    rates (deterministic simulated-clock numbers) must not exceed the
+    baseline by more than ``miss_tolerance`` (absolute). Wall-clock
+    fields (classify latencies, real fps) are informational only —
+    machine-dependent, never gated. -> (problems, notes)."""
+    problems, notes = [], []
+    base, cand = baseline["scenarios"], candidate["scenarios"]
+    common = sorted(base.keys() & cand.keys())
+    if not common:
+        return ["no common scenarios between baseline and candidate"], notes
+    for only, payload in (("baseline", base.keys() - cand.keys()),
+                          ("candidate", cand.keys() - base.keys())):
+        if payload:
+            notes.append(f"scenarios only in {only} (skipped): "
+                         f"{sorted(payload)}")
+    for name in common:
+        b_agg, c_agg = base[name]["aggregate"], cand[name]["aggregate"]
+        for rate in ("deadline_miss_rate", "drop_rate"):
+            b, c = b_agg.get(rate), c_agg.get(rate)
+            if b is None or c is None:
+                continue
+            if c > b + miss_tolerance:
+                problems.append(
+                    f"{name}: {rate} regressed {b:.3f} -> {c:.3f} "
+                    f"(> +{miss_tolerance:.3f} allowed)")
+            elif c != b:
+                notes.append(f"{name}: {rate} changed {b:.3f} -> {c:.3f}")
+        if b_agg.get("frames") != c_agg.get("frames"):
+            notes.append(f"{name}: frame count changed "
+                         f"{b_agg.get('frames')} -> {c_agg.get('frames')}")
+    return problems, notes
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline")
@@ -100,22 +147,36 @@ def main(argv=None) -> int:
                     help="allowed fractional interpret-proxy slowdown")
     ap.add_argument("--est-tolerance", type=float, default=0.10,
                     help="allowed fractional cost-model est_time growth")
+    ap.add_argument("--miss-tolerance", type=float, default=0.0,
+                    help="allowed absolute deadline-miss/drop rate growth "
+                         "(streaming artifacts)")
     args = ap.parse_args(argv)
     with open(args.baseline) as f:
         baseline = json.load(f)
     with open(args.candidate) as f:
         candidate = json.load(f)
-    problems, notes = compare(baseline, candidate,
-                              proxy_tolerance=args.proxy_tolerance,
-                              est_tolerance=args.est_tolerance)
+    streaming = "scenarios" in baseline, "scenarios" in candidate
+    if streaming[0] != streaming[1]:
+        print("REGRESSION: baseline and candidate are different artifact "
+              "kinds (conv vs streaming)", file=sys.stderr)
+        return 1
+    if all(streaming):
+        problems, notes = compare_streaming(
+            baseline, candidate, miss_tolerance=args.miss_tolerance)
+        what = f"{len(candidate['scenarios'])} scenarios"
+    else:
+        problems, notes = compare(baseline, candidate,
+                                  proxy_tolerance=args.proxy_tolerance,
+                                  est_tolerance=args.est_tolerance)
+        what = (f"{len(candidate['layers'])} candidate layers vs "
+                f"{len(baseline['layers'])} baseline")
     for n in notes:
         print(f"note: {n}")
     for p in problems:
         print(f"REGRESSION: {p}", file=sys.stderr)
     if problems:
         return 1
-    print(f"bench comparison clean: {len(candidate['layers'])} candidate "
-          f"layers vs {len(baseline['layers'])} baseline")
+    print(f"bench comparison clean: {what}")
     return 0
 
 
