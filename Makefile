@@ -56,6 +56,19 @@ bench-streaming:
 bench-compare-streaming:
 	$(PYTHON) tools/compare_bench.py benchmarks/baseline/BENCH_streaming.json BENCH_streaming.json
 
+# Precision sweep: fp32 reference vs bf16/fp16/int8-weight variants of the
+# same parameters -> accuracy-vs-speed rows in BENCH_quant.json.
+.PHONY: bench-quant
+bench-quant:
+	PYTHONPATH=src:. $(PYTHON) benchmarks/run.py --quant BENCH_quant.json
+
+# Gate the fresh BENCH_quant.json against the committed baseline: fails on
+# a top-1 agreement drop, a logit-error blowup, or any site newly falling
+# back to xla in a reduced precision.
+.PHONY: bench-compare-quant
+bench-compare-quant:
+	$(PYTHON) tools/compare_bench.py benchmarks/baseline/BENCH_quant.json BENCH_quant.json
+
 # Validate every local link/anchor in README.md and docs/ (CI step).
 .PHONY: docs-check
 docs-check:

@@ -26,6 +26,14 @@ deadline-miss rate, drop rate, frame latency percentiles, and classify
 contention to BENCH_streaming.json. The simulated-clock numbers are
 deterministic, so CI gates on the miss rate (tools/compare_bench.py);
 the wall-clock classify/contention numbers are an ungated trend line.
+
+``--quant PATH`` runs the accuracy-vs-speed precision sweep: one fp32
+reference engine, then bf16 / fp16 / int8-weight variants sharing the
+same parameter values, each classifying the same image set. Per-precision
+rows (top-1 agreement with fp32, max relative logit error, dtype-keyed
+cost-model totals, weight storage bytes, xla fallback sites) go to
+BENCH_quant.json; tools/compare_bench.py gates agreement drops and any
+tuned-site -> xla fallback in low precision against the baseline.
 """
 from __future__ import annotations
 
@@ -271,6 +279,101 @@ def emit_streaming_json(path, *, networks=("resnet18", "mobilenet_v2"),
     print(f"wrote {path} in {payload['wall_s']:.1f}s")
 
 
+def emit_quant_json(path, config="resnet18", n_images=8):
+    """Accuracy-vs-speed across precisions (the BENCH_quant.json artifact).
+
+    One fp32 reference engine of the tiny config supplies the parameter
+    values and the ground-truth logits; each reduced-precision row reuses
+    those same values (cast, or int8-quantized) so the sweep isolates
+    precision from initialization. Rows:
+
+      * ``float32`` — the reference (agreement 1.0 by construction);
+      * ``bfloat16`` / ``float16`` — compute + storage at the reduced
+        width, tuned under the dtype-keyed plan (byte terms halve, so
+        ``est_time_s`` is the speed side of the trade);
+      * ``int8`` — weight-only quantization via ``repro.quant``: int8
+        codes + per-channel scales folded into the fused epilogue, fp32
+        compute, fp32 plan reused. ``weight_bytes`` carries the ~4x
+        storage saving; ``est_time_s`` stays the compute-dtype estimate.
+
+    Everything is seeded, so rows are deterministic on a given platform —
+    the CI gate compares agreement/xla-fallback against the committed
+    baseline.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get, tiny_variant
+    from repro.core import InferenceEngine
+    from repro.core.dtypes import KERNEL_DTYPES, with_precision
+    from repro.quant import quantization_error, quantize_params
+
+    cfg = tiny_variant(get(config))
+    ref = InferenceEngine(cfg)  # fp32 reference: params, plan, logits
+    size = cfg.extra["img"]
+    images = jax.random.normal(jax.random.key(0), (n_images, size, size, 3))
+    ref_logits = np.asarray(ref.run_batch(images), np.float32)
+    ref_top1 = ref_logits.argmax(-1)
+    ref_max = np.abs(ref_logits).max() + 1e-12
+
+    def cast_params(tree, dt):
+        return jax.tree.map(
+            lambda x: x.astype(dt)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+    def param_bytes(tree):
+        return int(sum(x.size * jnp.dtype(x.dtype).itemsize
+                       for x in jax.tree.leaves(tree)))
+
+    def row(name, eng, weight_bytes, extra=None):
+        logits = np.asarray(eng.run_batch(images), np.float32)
+        plan = eng.plan
+        r = {
+            "dtype": name,
+            "n_images": n_images,
+            "top1_agreement": float((logits.argmax(-1) == ref_top1).mean()),
+            "logit_rel_err": float(np.abs(logits - ref_logits).max()
+                                   / ref_max),
+            "est_time_s": sum(c.est_time for c in plan.choices.values()),
+            "est_bytes": sum(c.est_bytes for c in plan.choices.values()),
+            "weight_bytes": weight_bytes,
+            "xla_sites": sorted(n for n, c in plan.choices.items()
+                                if c.algorithm == "xla"),
+        }
+        r.update(extra or {})
+        return r
+
+    rows = [row("float32", ref, param_bytes(ref.params))]
+    for dt in KERNEL_DTYPES:
+        if dt == "float32":
+            continue
+        cfg_v = with_precision(cfg, dt)
+        eng = InferenceEngine(cfg_v, params=cast_params(ref.params, dt))
+        rows.append(row(dt, eng, param_bytes(eng.params)))
+    qparams, qreport = quantize_params(ref.params)
+    qeng = InferenceEngine(cfg, params=qparams, plan=ref.plan)
+    conv_w_fp32 = sum(q.codes.size * 4 for q in qreport.values())
+    q_storage = sum(q.storage_bytes for q in qreport.values())
+    werr = quantization_error(ref.params, qreport)
+    rows.append(row(
+        "int8", qeng, param_bytes(ref.params) - conv_w_fp32 + q_storage,
+        {"quantized_sites": len(qreport),
+         "max_weight_rounding_rel_err": max(werr.values())}))
+
+    payload = {"kind": "quant", "config": cfg.name, "n_images": n_images,
+               "rows": rows}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    for r in rows:
+        print(f"{r['dtype']:>9}: top1 agreement {r['top1_agreement']:.3f}, "
+              f"logit rel err {r['logit_rel_err']:.2e}, "
+              f"est {r['est_time_s'] * 1e6:.1f}us, "
+              f"weights {r['weight_bytes'] / 1e3:.1f}kB, "
+              f"{len(r['xla_sites'])} xla sites")
+    print(f"wrote {path}: {len(rows)} precision rows on {cfg.name}")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", metavar="PATH",
@@ -284,6 +387,9 @@ def main(argv=None) -> None:
     ap.add_argument("--stream", metavar="PATH",
                     help="run the multi-stream deadline bench and emit "
                          "per-stream miss-rate JSON (BENCH_streaming.json)")
+    ap.add_argument("--quant", metavar="PATH",
+                    help="run the precision sweep (fp32/bf16/fp16/int8) and "
+                         "emit the accuracy-vs-speed JSON (BENCH_quant.json)")
     args = ap.parse_args(argv)
     if args.json:
         emit_json(args.json, config=args.config)
@@ -293,6 +399,9 @@ def main(argv=None) -> None:
         return
     if args.stream:
         emit_streaming_json(args.stream)
+        return
+    if args.quant:
+        emit_quant_json(args.quant, config=args.config)
         return
 
     t0 = time.time()

@@ -25,6 +25,7 @@ import time
 from dataclasses import asdict, dataclass, field
 
 from repro.core.convspec import ConvSpec
+from repro.core.dtypes import ACC_BYTES
 
 log = logging.getLogger(__name__)
 
@@ -56,7 +57,11 @@ class Choice:
 
 
 def _el(spec):
-    return 2 if "16" in spec.dtype else 4
+    """Bytes per streamed element — shared rule, so dtype really moves the
+    roofline (halving the width halves every byte term, which is what lets
+    bf16 flip a site's winning algorithm). Accumulator terms stay ACC_BYTES
+    wide regardless: kernels accumulate in fp32 and cast on the write."""
+    return spec.element_size
 
 
 def tunable(spec: ConvSpec) -> bool:
@@ -126,7 +131,8 @@ def _candidates(spec: ConvSpec, epilogue=False):
         filt = R * S * K * el
         for tc in (128, 256, 512):
             tc = min(tc, K)
-            vmem = hp * wp * -(-tc // m) * el + R * S * tc * el + P * tc * 4
+            vmem = hp * wp * -(-tc // m) * el + R * S * tc * el \
+                + P * tc * ACC_BYTES
             cands.append(("depthwise", (("block_c", tc),),
                           img + filt + out + ep, spec.flops, vmem))
             if tc == K:
@@ -139,7 +145,7 @@ def _candidates(spec: ConvSpec, epilogue=False):
         filt = C * K * el
         for tk in (128, 256, 512):
             tk = min(tk, K)
-            vmem = (img // max(B, 1)) + C * tk * el + P * tk * 4
+            vmem = (img // max(B, 1)) + C * tk * el + P * tk * ACC_BYTES
             cands.append(("pointwise", (("block_k", tk),),
                           img + filt + out + ep, spec.flops, vmem))
             if tk == K:
@@ -154,7 +160,7 @@ def _candidates(spec: ConvSpec, epilogue=False):
     # --- ilpm: image resident; filters streamed once; K-tiled grid ---
     for tk in (128, 256, 512):
         tk = min(tk, K)
-        vmem = (img // max(B, 1)) + R * S * C * tk * el + P * tk * 4
+        vmem = (img // max(B, 1)) + R * S * C * tk * el + P * tk * ACC_BYTES
         cands.append(("ilpm", (("block_k", tk),), img + filt + out + ep,
                       spec.flops, vmem))
         if tk == K:
@@ -165,7 +171,7 @@ def _candidates(spec: ConvSpec, epilogue=False):
         th = min(th, H)
         bh = (th - 1) * stride + R
         band = B * -(-H // th) * bh * wp * C * el
-        vmem = bh * wp * C * el + filt + th * W * K * 4
+        vmem = bh * wp * C * el + filt + th * W * K * ACC_BYTES
         cands.append(("direct", (("block_h", th),), band + filt + out + ep,
                       spec.flops, vmem))
         if th == H:
@@ -180,7 +186,8 @@ def _candidates(spec: ConvSpec, epilogue=False):
     # the full unfused output round-trip, not the ~free vector loads ---
     patches = B * P * R * S * C * el
     ep_im2col = spec.epilogue_bytes if epilogue else 0
-    vmem = min(P, 256) * R * S * C * el + R * S * C * 128 * el + 256 * 128 * 4
+    vmem = min(P, 256) * R * S * C * el + R * S * C * 128 * el \
+        + 256 * 128 * ACC_BYTES
     cands.append(("im2col", (),
                   img + patches + patches + filt + out + ep_im2col,
                   spec.flops, vmem))
@@ -189,7 +196,7 @@ def _candidates(spec: ConvSpec, epilogue=False):
     for tk in (128, 256):
         tk = min(tk, K)
         vmem = (img // max(B, 1)) + P * R * S * C * el // max(
-            -(-K // tk), 1) + R * S * C * tk * el + P * tk * 4
+            -(-K // tk), 1) + R * S * C * tk * el + P * tk * ACC_BYTES
         # model the redundant unroll as extra VMEM->VMEM work: ~10% flop tax
         cands.append(("libdnn", (("block_k", tk),), img + filt + out + ep,
                       int(spec.flops * 1.10), vmem))

@@ -1,7 +1,15 @@
-"""ConvSpec: the key the autotuner and algorithm registry dispatch on."""
+"""ConvSpec: the key the autotuner and algorithm registry dispatch on.
+
+``dtype`` is a first-class axis of the key: byte-traffic terms scale with
+``repro.core.dtypes.element_size``, so a bf16 spec costs (and may tune)
+differently from the same geometry in fp32, and two specs differing only
+in dtype are distinct tuning keys.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass
+
+from repro.core.dtypes import element_size
 
 
 @dataclass(frozen=True)
@@ -55,9 +63,15 @@ class ConvSpec:
             * self.c_per_group * self.k
 
     @property
+    def element_size(self) -> int:
+        """Bytes per stored element (shared rule — int8 counts as 1, not
+        the 4 the seed's hand-rolled ``2 if "16" in dtype`` gave it)."""
+        return element_size(self.dtype)
+
+    @property
     def bytes_min(self) -> int:
         """Compulsory traffic: image in + filters in + output out."""
-        el = 2 if "16" in self.dtype else 4
+        el = self.element_size
         return el * (self.batch * self.h * self.w * self.c
                      + self.r * self.s * self.c_per_group * self.k
                      + self.batch * self.out_h * self.out_w * self.k)
@@ -68,8 +82,8 @@ class ConvSpec:
         read + one write of the conv output. Fused kernels pay ~none (the
         (k,) scale/bias vectors are noise); the cost model charges this to
         the XLA escape hatch when the call site wants an epilogue."""
-        el = 2 if "16" in self.dtype else 4
-        return 2 * el * self.batch * self.out_h * self.out_w * self.k
+        return 2 * self.element_size * self.batch * self.out_h \
+            * self.out_w * self.k
 
     @classmethod
     def from_tensors(cls, x, w, stride):

@@ -1,0 +1,113 @@
+"""Precision rules for the whole convspec → autotune → kernels pipeline.
+
+One module owns every dtype fact the repo needs, so element-size
+accounting can never drift between ``ConvSpec``, the cost model, and the
+benchmarks again (the seed hand-rolled ``2 if "16" in dtype else 4`` in
+three places — and mis-sized int8 as 4 bytes in all of them):
+
+  * ``element_size(dtype)`` — bytes per element of the *stored/streamed*
+    tensors (images, filters, outputs). This is what HBM-traffic and VMEM
+    working-set estimates scale with, and why dtype is a real tuning
+    axis: halving the element width halves every byte term of the
+    roofline, which can flip the winning algorithm per site.
+  * ``ACC_DTYPE`` / ``ACC_BYTES`` — the accumulator rule. Every kernel
+    accumulates in fp32 regardless of the input dtype (Lavin & Gray:
+    fp16-class arithmetic holds accuracy when accumulation stays wide;
+    on TPU ``preferred_element_type=float32`` is also what the MXU
+    natively does for bf16 inputs) and casts on the single output write.
+    Cost-model VMEM terms therefore charge accumulators at ``ACC_BYTES``
+    even for 2-byte inputs.
+  * ``tolerance(dtype)`` — the documented kernel-vs-reference parity
+    bound per dtype (relative to the reference's max magnitude); the
+    precision test sweeps and docs/algorithms.md quote the same table.
+  * ``with_precision(cfg, dtype)`` — the one knob serving exposes: an
+    ``ArchConfig`` variant whose compute *and* stored dtypes are
+    ``dtype`` (mixed master/compute splits are a training concern; a
+    deployed inference engine holds its params in its compute dtype).
+
+``int8`` appears here as a *storage* width (quantized weights, wire
+formats — see ``repro.quant``); compute on int8 codes happens after a
+cast to the engine's float compute dtype, with the per-channel
+dequantization scales folded into the fused epilogue.
+"""
+from __future__ import annotations
+
+# Bytes per stored element. Keys are the canonical string names used by
+# ConvSpec.dtype / ArchConfig.dtype (str(jnp.dtype(...)) agrees).
+_ELEMENT_SIZES = {
+    "float64": 8,
+    "float32": 4,
+    "int32": 4,
+    "bfloat16": 2,
+    "float16": 2,
+    "int8": 1,
+    "uint8": 1,
+}
+
+# The accumulator rule: accumulate wide, cast once on the output write.
+ACC_DTYPE = "float32"
+ACC_BYTES = 4
+
+# Dtypes the kernel families accept end-to-end (plan-tunable precisions).
+KERNEL_DTYPES = ("float32", "bfloat16", "float16")
+
+# Kernel-vs-reference parity bounds: max |y - ref| / max |ref| with the
+# reference computed in fp32. With fp32 accumulation the error budget is
+# one rounding of the inputs plus one of the output write, so the bound
+# tracks the input mantissa (bf16: 8 bits, fp16: 11 bits), not the
+# accumulation depth. docs/algorithms.md quotes this table.
+_TOLERANCES = {
+    "float32": 2e-5,
+    "float16": 5e-3,
+    "bfloat16": 3e-2,
+}
+
+
+def canonical(dtype) -> str:
+    """Canonical string name for a dtype-like (str, np/jnp dtype, type)."""
+    s = str(dtype)
+    # jnp types repr as "<class 'jax.numpy.float16'>"; dtype objs as "float16"
+    for name in _ELEMENT_SIZES:
+        if s == name or s.endswith(f".{name}'>") or s == f"<dtype: {name}>":
+            return name
+    return s
+
+
+def element_size(dtype) -> int:
+    """Bytes per stored element — the single source of truth.
+
+    Raises on unknown dtypes rather than guessing: a silent default is
+    exactly the bug this module replaces.
+    """
+    name = canonical(dtype)
+    try:
+        return _ELEMENT_SIZES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown dtype {dtype!r}; known: {sorted(_ELEMENT_SIZES)}"
+        ) from None
+
+
+def tolerance(dtype) -> float:
+    """Documented kernel-vs-fp32-reference relative tolerance."""
+    return _TOLERANCES[canonical(dtype)]
+
+
+def with_precision(cfg, dtype):
+    """An ``ArchConfig`` variant running (and storing params) in ``dtype``.
+
+    The serving precision knob: ``Server.submit(net, img, dtype=...)`` and
+    ``Server.open_stream(net, dtype=...)`` route through this, giving the
+    variant its own engine-cache entry and its own tuning plan (byte
+    traffic — and therefore the optimal algorithm — changes with element
+    width, so plans are keyed by dtype too).
+    """
+    name = canonical(dtype)
+    if name not in KERNEL_DTYPES:
+        raise ValueError(
+            f"unsupported engine precision {dtype!r}; "
+            f"kernel dtypes: {KERNEL_DTYPES} "
+            f"(int8 is a storage format — see repro.quant)")
+    if cfg.dtype == name and cfg.param_dtype == name:
+        return cfg
+    return cfg.replace(dtype=name, param_dtype=name)

@@ -152,11 +152,17 @@ class InferenceEngine:
                 w = self._site_params(name)["w"]
             except (KeyError, TypeError):
                 continue  # plan site not in this param tree: skip
-            cache[name] = _ref.winograd_filter_transform(w)
+            # the transform einsums against fp32 G matrices (promoting the
+            # result); cast back so a bf16/fp16 engine streams U at the
+            # engine's element width, matching the cost model's accounting
+            cache[name] = _ref.winograd_filter_transform(w).astype(w.dtype)
         return cache
 
     def _validate_plan(self, plan: TuningPlan) -> None:
-        """A deployed plan must match this network's conv geometry."""
+        """A deployed plan must match this network's conv geometry *and*
+        precision — ConvSpec carries ``dtype``, so a plan tuned in fp32
+        cannot be deployed onto a bf16 engine (byte traffic, and therefore
+        the tuned choices, differ)."""
         import logging
 
         ours = dict(self._conv_specs())
@@ -165,7 +171,8 @@ class InferenceEngine:
         if mismatched:
             raise ValueError(
                 f"tuning plan was built for a different network/input "
-                f"size; mismatched specs for {sorted(mismatched)}")
+                f"size/dtype (engine dtype {self.cfg.dtype!r}); "
+                f"mismatched specs for {sorted(mismatched)}")
         missing = ours.keys() - plan.specs.keys()
         extra = plan.specs.keys() - ours.keys()
         if missing or extra:

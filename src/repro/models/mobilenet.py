@@ -61,7 +61,10 @@ def conv_specs(cfg):
     enumeration the engine tunes. Walks the exact geometry of ``forward``:
     stem 3x3 stride 2, then per block pw1 (1x1) at the incoming size,
     dw (depthwise, carries the block stride), pw2 (1x1) at the downsampled
-    size; finally the 1x1 head."""
+    size; finally the 1x1 head. Every spec carries ``cfg.dtype`` — same
+    precision-as-tuning-key contract as ``resnet.conv_specs``."""
+    import dataclasses
+
     from repro.core.convspec import ConvSpec
 
     img = cfg.extra["img"]
@@ -80,7 +83,8 @@ def conv_specs(cfg):
         last = cout
     specs.append(("head", ConvSpec(h=size, w=size, c=last,
                                    k=cfg.extra["head"], r=1, s=1)))
-    return specs
+    return [(name, dataclasses.replace(sp, dtype=cfg.dtype))
+            for name, sp in specs]
 
 
 def forward(params, cfg, images, *, algorithm="auto", plan=None,
@@ -102,6 +106,7 @@ def forward(params, cfg, images, *, algorithm="auto", plan=None,
     single = images.ndim == 3
     if single:
         images = images[None]
+    images = images.astype(cfg.dtype)  # compute precision is cfg.dtype
     plan = plan or {}
     wu = winograd_u or {}
     x = _conv(params["stem"], images, 2, algorithm,

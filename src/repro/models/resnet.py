@@ -67,8 +67,12 @@ def conv_specs(cfg):
     bottlenecks, and the 1x1 projection shortcut), and bottleneck stages
     tune the 3x3 at the bottleneck width (cout // 4). Every site is
     enumerated — stem, strided entries, and 1x1s included — so a tuned
-    plan covers 100% of the backbone's conv sites.
+    plan covers 100% of the backbone's conv sites. Every spec carries
+    ``cfg.dtype``: precision is part of the tuning key, so a bf16 variant
+    tunes (and caches) its own plan.
     """
+    import dataclasses
+
     from repro.core.convspec import ConvSpec
 
     img = cfg.extra["img"]
@@ -106,7 +110,8 @@ def conv_specs(cfg):
                     k=cout)))
             size = -(-size // stride)  # SAME: ceil, matching the forward
             cin = cout
-    return specs
+    return [(name, dataclasses.replace(sp, dtype=cfg.dtype))
+            for name, sp in specs]
 
 
 def _conv(p, x, stride, algorithm, padding="SAME", choice=None, act=None,
@@ -168,6 +173,7 @@ def forward(params, cfg, images, *, algorithm="ilpm", plan=None,
     single = images.ndim == 3
     if single:
         images = images[None]
+    images = images.astype(cfg.dtype)  # compute precision is cfg.dtype
     plan = plan or {}
     wu = winograd_u or {}
     blocks = cfg.extra["blocks"]

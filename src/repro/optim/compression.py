@@ -9,13 +9,18 @@ Karimireddy et al., arXiv:1901.09847).
 Implemented with shard_map over the 'pod' axis so the collective is explicit
 and the quantization happens on the wire-adjacent side. Within a pod the
 usual full-precision psum runs over the 'data' axis first.
+
+The quantize/dequantize core lives in ``repro.quant`` (shared with the
+inference engines' per-channel int8 weight path); this module keeps the
+error-feedback + collective machinery and re-exports the primitives for
+backward compatibility.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
+
+from repro.quant import dequantize, quantize  # noqa: F401  (re-export)
 
 try:  # newer JAX exposes shard_map at the top level (check_vma kwarg)
     from jax import shard_map as _shard_map
@@ -30,18 +35,6 @@ def shard_map(f, *, mesh, in_specs, out_specs):
     """Version-tolerant shard_map with replication checking disabled."""
     return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                       **{_REPLICATION_KWARG: False})
-
-
-def quantize(x):
-    """x -> (int8 codes, fp32 scale). Symmetric per-tensor."""
-    x32 = x.astype(jnp.float32)
-    scale = jnp.maximum(jnp.abs(x32).max(), 1e-12) / 127.0
-    codes = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
-    return codes, scale
-
-
-def dequantize(codes, scale):
-    return codes.astype(jnp.float32) * scale
 
 
 def ef_compress(g, err):

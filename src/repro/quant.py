@@ -1,0 +1,136 @@
+"""Shared quantization primitives: int8 codes + scales, epilogue folding.
+
+Two consumers share these rules:
+
+  * **inference** (this module's main job): per-output-channel symmetric
+    int8 weight quantization for the CNN engines. The trick that makes it
+    ride the existing kernels unchanged is *epilogue folding*: for
+    per-channel scales ``s_k``,
+
+        conv(x, codes_k · s_k) = conv(x, codes_k) · s_k
+
+    so the dequantization multiply is exactly the fused ``y·scale + bias``
+    epilogue every kernel already applies inside its output write — the
+    folded-BN ``scale`` vector just absorbs ``s_k``. No new kernel, no
+    extra HBM pass, and the int8 codes (integers ≤ 127) are exact in any
+    float compute dtype, so accumulate-in-fp32 semantics are unchanged.
+  * **training** (``repro.optim.compression``): per-tensor symmetric int8
+    gradient compression for the cross-pod all-reduce — same
+    quantize/dequantize core, one scalar scale instead of (K,).
+
+Storage accounting for the cost model / benchmarks uses
+``repro.core.dtypes.element_size("int8") == 1``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x):
+    """x -> (int8 codes, fp32 scale). Symmetric per-tensor."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.abs(x32).max(), 1e-12) / 127.0
+    codes = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def dequantize(codes, scale):
+    """Inverse of ``quantize`` (also per-channel: scale broadcasts)."""
+    return codes.astype(jnp.float32) * scale
+
+
+def quantize_per_channel(w, axis: int = -1):
+    """w -> (int8 codes, fp32 scales along ``axis``). Symmetric.
+
+    For HWIO conv filters ``axis=-1`` is the output-channel axis K — one
+    scale per output channel, the granularity the fused epilogue's (K,)
+    ``scale`` vector can absorb exactly.
+    """
+    w32 = w.astype(jnp.float32)
+    reduce_axes = tuple(i for i in range(w32.ndim)
+                        if i != axis % w32.ndim)
+    scales = jnp.maximum(jnp.abs(w32).max(axis=reduce_axes), 1e-12) / 127.0
+    shape = [1] * w32.ndim
+    shape[axis % w32.ndim] = -1
+    codes = jnp.clip(jnp.round(w32 / scales.reshape(shape)),
+                     -127, 127).astype(jnp.int8)
+    return codes, scales
+
+
+@dataclass(frozen=True)
+class QuantizedConv:
+    """One conv site's int8 weights: codes (R,S,Cg,K) + per-channel scales
+    (K,). ``storage_bytes`` is what actually ships (codes int8 + fp32
+    scales) — the 4x weight-traffic saving the bench accounts for."""
+
+    codes: jax.Array   # int8
+    scales: jax.Array  # fp32, (K,)
+
+    @property
+    def storage_bytes(self) -> int:
+        return self.codes.size + 4 * self.scales.size
+
+
+def _is_conv_site(node) -> bool:
+    return (isinstance(node, dict) and {"w", "scale", "bias"} <= node.keys()
+            and getattr(node["w"], "ndim", 0) == 4)
+
+
+def quantize_params(params, *, compute_dtype=None):
+    """Quantize every conv site of a CNN param tree to int8 weights with
+    the per-channel scales folded into the fused epilogue.
+
+    Returns ``(qparams, report)``:
+
+      * ``qparams`` — a param tree the *unchanged* model forward runs:
+        each conv ``w`` is replaced by its int8 codes cast back to
+        ``compute_dtype`` (exact — the codes are integers ≤ 127), and the
+        site's folded-BN ``scale`` becomes ``scale · s_k``, so every
+        kernel's existing in-kernel epilogue performs the dequantization
+        multiply for free. ``bias`` is untouched (the epilogue applies it
+        after the scale, matching ``(conv·s_k)·scale + bias``).
+      * ``report`` — {site name: QuantizedConv} carrying the true int8
+        codes + scales (storage/wire format, and what the bench's
+        weight-byte accounting reads).
+
+    Non-conv leaves (the fc head, 1D params) pass through unchanged —
+    keeping the classifier head in float is standard practice and the
+    head is traffic-noise anyway.
+    """
+    report: dict[str, QuantizedConv] = {}
+
+    def walk(node, path):
+        if _is_conv_site(node):
+            w = node["w"]
+            dt = compute_dtype or w.dtype
+            codes, scales = quantize_per_channel(w, axis=-1)
+            report[".".join(path)] = QuantizedConv(codes, scales)
+            out = dict(node)
+            out["w"] = codes.astype(dt)
+            # epilogue folding: the kernels' fused y·scale + bias applies
+            # the dequantization multiply (scales are kept fp32; the
+            # epilogue operands are materialized fp32 anyway)
+            out["scale"] = node["scale"].astype(jnp.float32) * scales
+            return out
+        if isinstance(node, dict):
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        return node
+
+    return walk(params, ()), report
+
+
+def quantization_error(params, qreport) -> dict:
+    """Max |w - dequant(w)| / max |w| per quantized site — the analytic
+    weight-rounding error the accuracy row contextualizes."""
+    out = {}
+    for name, q in qreport.items():
+        node = params
+        for part in name.split("."):
+            node = node[part]
+        w32 = node["w"].astype(jnp.float32)
+        err = jnp.abs(w32 - dequantize(q.codes, q.scales)).max()
+        out[name] = float(err / (jnp.abs(w32).max() + 1e-12))
+    return out

@@ -3,14 +3,19 @@
 Many model variants (resnet18/50, mobilenet_v2, tiny variants) share one
 serving process. Building an engine is expensive — tune a plan, precompute
 Winograd transforms, jit the forward — so the cache keys each built engine
-by ``(network, input_size, device, dtype)`` and evicts least-recently-used
-beyond ``capacity``.
+by ``(network, input_size, device, compute_dtype, param_dtype)`` and
+evicts least-recently-used beyond ``capacity``.
 
-Plans are cached separately, keyed by ``(network, input_size)`` only: a
-``TuningPlan`` is device-agnostic and dtype-agnostic (it maps layer names
-to algorithm + block parameters for a conv *geometry*), so a bf16 engine
-deployed next to an f32 one reuses the tuned plan instead of re-tuning —
-the engine's existing ``plan=`` constructor hook makes this free.
+Plans are cached separately, keyed by ``(network, input_size,
+compute_dtype)``: a ``TuningPlan`` is device-agnostic, but NOT
+dtype-agnostic — ConvSpec carries the compute dtype, byte-traffic terms
+scale with its element width, and the tuned algorithm can flip between
+fp32 and bf16 for the same geometry. Engines that differ only in
+``param_dtype`` (storage precision of the weights) still share a plan:
+the plan was tuned for the compute dtype, which is what the kernels
+stream. The seed keyed plans by geometry alone, silently deploying fp32
+choices onto reduced-precision engines; ConvSpec's dtype field now makes
+the engine's plan validation reject exactly that, so the key must match.
 
 Streaming sessions hold **leases** (``lease``): a leased entry is pinned —
 it does not count against ``capacity`` and LRU eviction skips it — so a
@@ -29,19 +34,26 @@ from repro.core.engine import InferenceEngine
 
 
 def engine_key(cfg, device: str | None = None) -> tuple:
-    """The cache key: (network, input_size, device, dtype).
+    """The cache key: (network, input_size, device, dtype, param_dtype).
 
     ``device`` defaults to the platform of the default JAX device — the
-    thing kernel lowering actually varies over.
+    thing kernel lowering actually varies over. Compute dtype and param
+    (storage) dtype key independently: they change the jitted program.
     """
     if device is None:
         device = jax.devices()[0].platform
-    return (cfg.name, cfg.extra.get("img"), device, cfg.param_dtype)
+    return (cfg.name, cfg.extra.get("img"), device, cfg.dtype,
+            cfg.param_dtype)
 
 
 def plan_key(cfg) -> tuple:
-    """Plan reuse key: geometry only (network, input_size)."""
-    return (cfg.name, cfg.extra.get("img"))
+    """Plan reuse key: (network, input_size, compute_dtype).
+
+    Plans are tuned per compute dtype — element width moves every byte
+    term of the cost model — but are independent of ``param_dtype``
+    (weight storage) and device (the plan is an offline artifact).
+    """
+    return (cfg.name, cfg.extra.get("img"), cfg.dtype)
 
 
 class EngineLease:
@@ -101,9 +113,9 @@ class EngineCache:
     def get(self, cfg, *, params=None, seed: int = 0) -> InferenceEngine:
         """The engine for ``cfg``, building (and possibly evicting) on miss.
 
-        A miss reuses any cached plan for the same (network, input_size)
-        geometry, so an evicted-and-rebuilt engine — or a dtype variant —
-        skips tuning and goes straight to jit.
+        A miss reuses any cached plan for the same (network, input_size,
+        compute_dtype), so an evicted-and-rebuilt engine — or a variant
+        differing only in param storage — skips tuning, straight to jit.
 
         The slow build (tune + jit) runs under a per-key lock, not the
         global one: a first request for network B never stalls behind

@@ -47,13 +47,20 @@ class Server:
 
     # ------------------------------------------------------------------
 
-    def _resolve_cfg(self, network):
+    def _resolve_cfg(self, network, dtype=None):
         if isinstance(network, str):
             from repro.configs import get, tiny_variant
 
             cfg = get(network)
-            return tiny_variant(cfg) if self.tiny else cfg
-        return network
+            if self.tiny:
+                cfg = tiny_variant(cfg)
+        else:
+            cfg = network
+        if dtype is not None:
+            from repro.core.dtypes import with_precision
+
+            cfg = with_precision(cfg, dtype)
+        return cfg
 
     def _batcher(self, cfg) -> MicroBatcher:
         key = engine_key(cfg)
@@ -78,27 +85,37 @@ class Server:
 
     # ------------------------------------------------------------------
 
-    def submit(self, network, image):
+    def submit(self, network, image, *, dtype=None):
         """Non-blocking: route one (H, W, C) image to ``network``'s
-        batcher; returns a Future resolving to (classes,) logits."""
+        batcher; returns a Future resolving to (classes,) logits.
+
+        ``dtype`` is the precision knob: ``dtype="bfloat16"`` serves the
+        request from the network's bf16 variant (own engine-cache entry,
+        own dtype-keyed tuning plan, images cast in the forward); ``None``
+        serves at the config's native precision.
+        """
         if self._closed:
             raise RuntimeError("server is closed")
-        return self._batcher(self._resolve_cfg(network)).submit(image)
+        cfg = self._resolve_cfg(network, dtype)
+        return self._batcher(cfg).submit(image)
 
-    def run(self, network, image, timeout: float | None = 120.0):
+    def run(self, network, image, timeout: float | None = 120.0, *,
+            dtype=None):
         """Blocking convenience: submit + await one request."""
-        return self.submit(network, image).result(timeout)
+        return self.submit(network, image, dtype=dtype).result(timeout)
 
-    def warm(self, network) -> None:
+    def warm(self, network, *, dtype=None) -> None:
         """Build ``network``'s engine + batcher ahead of traffic (the
-        tune/jit cost moves out of the first request's latency)."""
-        self._batcher(self._resolve_cfg(network))
+        tune/jit cost moves out of the first request's latency); with
+        ``dtype`` set, warms that precision variant."""
+        self._batcher(self._resolve_cfg(network, dtype))
 
     def open_stream(self, network, *, fps: float = 30.0,
                     deadline_ms: float | None = None,
                     sim_compute_s: float | None = None,
                     phase_s: float = 0.0,
-                    name: str | None = None) -> StreamSession:
+                    name: str | None = None,
+                    dtype=None) -> StreamSession:
         """Open a fixed-rate frame stream on ``network``.
 
         The session leases the engine from the shared cache — pinned
@@ -106,11 +123,14 @@ class Server:
         its own thread (or synchronously, under the simulated clock when
         ``sim_compute_s`` is set), so streams never head-of-line-block
         each other or the on-demand batchers. Closing the server closes
-        every still-open session.
+        every still-open session. ``dtype`` opens the stream on the
+        network's precision variant (same knob as ``submit``) — a bf16
+        stream leases the bf16 engine, pinned independently of the fp32
+        one.
         """
         if self._closed:
             raise RuntimeError("server is closed")
-        cfg = self._resolve_cfg(network)
+        cfg = self._resolve_cfg(network, dtype)
         lease = self.engines.lease(cfg)
         with self._lock:
             if name is None:

@@ -309,6 +309,7 @@ class StreamSession:
                 - min(f.arrival for f in frames)) if completed else None
         return {
             "name": self.name,
+            "dtype": self.engine.cfg.dtype,
             "fps_target": 1.0 / self.period_s,
             "deadline_ms": self.deadline_s * 1e3,
             "frames": total,

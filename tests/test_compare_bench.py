@@ -152,6 +152,99 @@ def test_streaming_committed_baseline_vs_itself_is_clean():
     assert d["scenarios"]["overload"]["aggregate"]["dropped"] > 0
 
 
+def _quant_payload(bf16_agree=1.0, bf16_err=7e-3, bf16_xla=(),
+                   bf16_est=1.2e-5):
+    def row(dtype, agree, err, est, xla=(), **extra):
+        return {"dtype": dtype, "n_images": 8, "top1_agreement": agree,
+                "logit_rel_err": err, "est_time_s": est,
+                "est_bytes": int(est * 8e11), "weight_bytes": 20_000_000,
+                "xla_sites": list(xla), **extra}
+    return {"kind": "quant", "config": "resnet18-tiny", "n_images": 8,
+            "rows": [row("float32", 1.0, 0.0, 2.4e-5),
+                     row("bfloat16", bf16_agree, bf16_err, bf16_est,
+                         bf16_xla),
+                     row("int8", 1.0, 1.7e-2, 2.4e-5,
+                         quantized_sites=12)]}
+
+
+def test_quant_clean_comparison_passes():
+    base = _quant_payload()
+    problems, _ = compare_bench.compare_quant(base, copy.deepcopy(base))
+    assert problems == []
+
+
+def test_quant_agreement_drop_fails_within_tolerance_noted():
+    base = _quant_payload()
+    cand = _quant_payload(bf16_agree=0.625)  # 3 of 8 images flipped
+    problems, _ = compare_bench.compare_quant(base, cand)
+    assert any("top-1 agreement regressed" in p for p in problems)
+    cand = _quant_payload(bf16_agree=0.875)  # 1 of 8: within tolerance
+    problems, notes = compare_bench.compare_quant(base, cand)
+    assert problems == []
+    assert any("agreement changed" in n for n in notes)
+
+
+def test_quant_logit_error_blowup_fails():
+    base = _quant_payload()
+    cand = _quant_payload(bf16_err=7e-3 * 3)  # > 2x baseline
+    problems, _ = compare_bench.compare_quant(base, cand)
+    assert any("logit rel err blew up" in p for p in problems)
+    # fp32's ~0 baseline row tolerates sub-floor noise (no 2x-of-zero trap)
+    cand = copy.deepcopy(base)
+    cand["rows"][0]["logit_rel_err"] = 5e-5
+    problems, _ = compare_bench.compare_quant(base, cand)
+    assert problems == []
+
+
+def test_quant_new_xla_fallback_in_low_precision_fails():
+    base = _quant_payload()
+    cand = _quant_payload(bf16_xla=("stem",))
+    problems, _ = compare_bench.compare_quant(base, cand)
+    assert any("newly fell back to xla" in p for p in problems)
+
+
+def test_quant_est_time_regression_fails():
+    base = _quant_payload()
+    cand = _quant_payload(bf16_est=1.2e-5 * 1.5)
+    problems, _ = compare_bench.compare_quant(base, cand)
+    assert any("est_time regressed" in p for p in problems)
+
+
+def test_quant_cli_detects_kind(tmp_path):
+    script = REPO / "tools" / "compare_bench.py"
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(_quant_payload()))
+    ok = subprocess.run([sys.executable, str(script), str(base), str(base)],
+                        capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stderr
+    assert "3 precision rows" in ok.stdout
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(_quant_payload(bf16_xla=("stem",))))
+    r = subprocess.run([sys.executable, str(script), str(base), str(bad)],
+                       capture_output=True, text=True)
+    assert r.returncode == 1 and "newly fell back to xla" in r.stderr
+    mixed = subprocess.run([sys.executable, str(script), str(base),
+                            str(REPO / "benchmarks" / "baseline" /
+                                "BENCH_conv.json")],
+                           capture_output=True, text=True)
+    assert mixed.returncode == 1
+    assert "different artifact kinds" in mixed.stderr
+
+
+def test_quant_committed_baseline_vs_itself_is_clean():
+    baseline = REPO / "benchmarks" / "baseline" / "BENCH_quant.json"
+    d = json.loads(baseline.read_text())
+    problems, _ = compare_bench.compare_quant(d, copy.deepcopy(d))
+    assert problems == []
+    rows = {r["dtype"]: r for r in d["rows"]}
+    # the invariants the CI sanity step pins, pinned on the baseline too
+    assert {"float32", "bfloat16", "float16", "int8"} <= rows.keys()
+    for r in rows.values():
+        assert r["xla_sites"] == []
+    assert rows["bfloat16"]["est_time_s"] < rows["float32"]["est_time_s"]
+    assert rows["int8"]["weight_bytes"] < rows["float32"]["weight_bytes"]
+
+
 def test_cli_exit_codes(tmp_path):
     """The committed baseline vs itself exits 0; vs an injected xla
     fallback exits 1 — what the CI self-check step relies on."""

@@ -1,0 +1,283 @@
+"""Precision as a first-class axis: shared dtype rules, kernel parity in
+reduced precision, dtype-carrying plans, the quant epilogue fold, and the
+serving precision knob.
+
+The parity sweep is the contract docs/algorithms.md documents: every
+registered algorithm, run on bf16/fp16 inputs, must match the fp32 lax
+ground truth within ``repro.core.dtypes.tolerance(dtype)`` — kernels
+accumulate in fp32 and cast once on the output write, so the error budget
+tracks the input mantissa, not the reduction depth.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ConvSpec, build_plan, cost_model_select
+from repro.core.dtypes import (
+    ACC_BYTES, KERNEL_DTYPES, canonical, element_size, tolerance,
+    with_precision)
+from repro.kernels import ops, ref
+from repro.quant import dequantize, quantize_per_channel
+
+KEY = jax.random.key(42)
+
+
+# ----------------------------------------------------------------------
+# the shared dtype rules (the three hand-rolled copies they replace)
+
+
+def test_element_size_table():
+    assert element_size("float32") == 4
+    assert element_size("bfloat16") == 2
+    assert element_size("float16") == 2
+    assert element_size("int8") == 1  # the seed mis-sized this as 4
+    assert element_size(jnp.bfloat16) == 2  # jnp types canonicalize
+    assert element_size(jnp.dtype("float16")) == 2
+    assert ACC_BYTES == element_size("float32")  # fp32 accumulator rule
+
+
+def test_element_size_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown dtype"):
+        element_size("float8_e4m3")
+
+
+def test_canonical_forms_agree():
+    for name in KERNEL_DTYPES:
+        assert canonical(name) == name
+        assert canonical(jnp.dtype(name)) == name
+        assert canonical(getattr(jnp, name)) == name
+
+
+def test_convspec_element_size_and_bytes_scale_with_dtype():
+    sp32 = ConvSpec(h=14, w=14, c=32, k=64)
+    sp16 = dataclasses.replace(sp32, dtype="bfloat16")
+    assert sp32.element_size == 4 and sp16.element_size == 2
+    assert sp16.bytes_min * 2 == sp32.bytes_min
+    assert sp16.epilogue_bytes * 2 == sp32.epilogue_bytes
+    assert sp16 != sp32  # dtype is part of the tuning key
+
+
+def test_with_precision_sets_both_dtypes_and_rejects_int8():
+    from repro.configs import get
+
+    cfg = with_precision(get("resnet18"), "bfloat16")
+    assert (cfg.dtype, cfg.param_dtype) == ("bfloat16", "bfloat16")
+    assert with_precision(cfg, "bfloat16") is cfg  # already there: no-op
+    with pytest.raises(ValueError, match="int8 is a storage format"):
+        with_precision(cfg, "int8")
+
+
+def test_cost_model_charges_dtype_correct_bytes():
+    """Halving the element width must halve the picked candidate's byte
+    traffic — the mechanism that lets reduced precision flip a site's
+    winning algorithm where the roofline crossover moves."""
+    sp32 = ConvSpec(h=28, w=28, c=64, k=128)
+    for dt in ("bfloat16", "float16"):
+        ch16 = cost_model_select(dataclasses.replace(sp32, dtype=dt))
+        ch32 = cost_model_select(sp32)
+        assert ch16.est_bytes <= -(-ch32.est_bytes // 2) + 1
+        assert ch16.est_time <= ch32.est_time
+
+
+# ----------------------------------------------------------------------
+# kernel parity: every registered algorithm x {fp32, bf16, fp16} x stride
+
+
+def _sweep_cases():
+    for algo in sorted(ops.ALGORITHMS):
+        strides = (1, 2) if algo in ("ilpm", "direct", "depthwise",
+                                     "pointwise") else (1,)
+        for stride in strides:
+            yield algo, stride
+
+
+def _spec_for(algo, stride):
+    if algo == "depthwise":
+        return ConvSpec(h=8, w=8, c=8, k=8, stride=stride, groups=8)
+    if algo == "pointwise":
+        return ConvSpec(h=8, w=8, c=8, k=16, r=1, s=1, stride=stride)
+    return ConvSpec(h=8, w=8, c=8, k=16, stride=stride)
+
+
+@pytest.mark.parametrize("dtype", KERNEL_DTYPES)
+@pytest.mark.parametrize("algo,stride", list(_sweep_cases()),
+                         ids=lambda v: str(v))
+def test_kernel_parity_across_dtypes(algo, stride, dtype):
+    """Pallas kernel output on dtype inputs vs the fp32 lax ground truth
+    of the *same values*: within the documented tolerance(dtype)."""
+    spec = _spec_for(algo, stride)
+    hp = (spec.out_h - 1) * stride + spec.r
+    wp = (spec.out_w - 1) * stride + spec.s
+    dt = jnp.dtype(dtype)
+    x = jax.random.normal(KEY, (1, hp, wp, spec.c), dt)
+    w = jax.random.normal(jax.random.fold_in(KEY, 1),
+                          (spec.r, spec.s, spec.c_per_group, spec.k), dt)
+    gt = ref.conv2d_reference(x.astype(jnp.float32),
+                              w.astype(jnp.float32), stride=stride,
+                              padding="VALID", groups=spec.groups)
+    y = ops.dispatch(algo, x, w, impl="pallas", stride=stride)
+    assert y.dtype == dt  # cast-on-write: output carries the input dtype
+    rel = float(jnp.abs(y.astype(jnp.float32) - gt).max()
+                / (jnp.abs(gt).max() + 1e-12))
+    assert rel < tolerance(dtype), (algo, stride, dtype, rel)
+
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "float16"])
+def test_fused_epilogue_in_reduced_precision(dtype):
+    """scale/bias/act fuse in fp32 inside the kernel even when the conv
+    runs in reduced precision — parity against the fp32 unfused math."""
+    dt = jnp.dtype(dtype)
+    x = jax.random.normal(KEY, (1, 10, 10, 8), dt)
+    w = jax.random.normal(jax.random.fold_in(KEY, 2), (3, 3, 8, 16), dt)
+    scale = jax.random.normal(jax.random.fold_in(KEY, 3), (16,))
+    bias = jax.random.normal(jax.random.fold_in(KEY, 4), (16,))
+    gt = ref.conv2d_reference(x.astype(jnp.float32), w.astype(jnp.float32),
+                              padding="VALID")
+    gt = jax.nn.relu(gt * scale + bias)
+    y = ops.dispatch("ilpm", x, w, impl="pallas", scale=scale, bias=bias,
+                     act="relu")
+    rel = float(jnp.abs(y.astype(jnp.float32) - gt).max()
+                / (jnp.abs(gt).max() + 1e-12))
+    assert rel < tolerance(dtype), rel
+
+
+# ----------------------------------------------------------------------
+# plans carry dtype
+
+
+def test_plan_json_round_trip_preserves_dtype(tmp_path):
+    specs = [("l0", ConvSpec(h=8, w=8, c=8, k=16, dtype="bfloat16")),
+             ("l1", ConvSpec(h=8, w=8, c=16, k=16, r=1, s=1,
+                             dtype="bfloat16"))]
+    plan = build_plan(specs, epilogue=True)
+    path = tmp_path / "plan.json"
+    plan.save(path)
+    from repro.core import TuningPlan
+
+    loaded = TuningPlan.load(path)
+    assert loaded.specs == plan.specs
+    assert {s.dtype for s in loaded.specs.values()} == {"bfloat16"}
+    assert loaded.choices == plan.choices
+
+
+def test_engine_rejects_cross_dtype_plan(tmp_path):
+    """A plan tuned in fp32 must not deploy onto a bf16 engine: ConvSpec
+    carries dtype, so validation sees mismatched specs."""
+    from repro.configs import get, tiny_variant
+    from repro.core import InferenceEngine
+
+    cfg32 = tiny_variant(get("resnet18"))
+    e32 = InferenceEngine(cfg32)
+    path = tmp_path / "plan32.json"
+    e32.save_plan(path)
+    with pytest.raises(ValueError, match="dtype"):
+        InferenceEngine(with_precision(cfg32, "bfloat16"), plan=str(path))
+
+
+@pytest.mark.parametrize("network", ["resnet18", "mobilenet_v2"])
+@pytest.mark.parametrize("dtype", ["bfloat16", "float16"])
+def test_full_size_reduced_precision_plans_have_no_xla_sites(network,
+                                                            dtype):
+    """The acceptance bar: tuned full-size ResNet-18 / MobileNetV2 plans
+    in reduced precision keep 100% of the backbone on kernel families."""
+    from repro.configs import get
+    from repro.models.registry import cnn_module
+
+    cfg = with_precision(get(network), dtype)
+    plan = build_plan(cnn_module(cfg).conv_specs(cfg), epilogue=True)
+    algos = plan.algorithms()
+    assert algos, network
+    xla = [n for n, a in algos.items() if a == "xla"]
+    assert xla == [], xla
+    assert {s.dtype for s in plan.specs.values()} == {dtype}
+
+
+# ----------------------------------------------------------------------
+# int8: quantize core + epilogue folding
+
+
+def test_compression_reexports_shared_quant_core():
+    from repro.optim import compression
+    from repro import quant
+
+    assert compression.quantize is quant.quantize
+    assert compression.dequantize is quant.dequantize
+
+
+def test_per_channel_quantize_bounds_rounding_error():
+    w = jax.random.normal(KEY, (3, 3, 8, 16))
+    codes, scales = quantize_per_channel(w)
+    assert codes.dtype == jnp.int8 and scales.shape == (16,)
+    err = jnp.abs(w - dequantize(codes, scales))
+    # symmetric rounding: at most half a step per channel
+    assert bool((err <= scales / 2 + 1e-7).all())
+
+
+def test_int8_epilogue_folding_identity():
+    """conv(x, codes)·s_k == conv(x, codes·s_k): the linearity that lets
+    the per-channel dequant multiply ride the existing fused epilogue."""
+    x = jax.random.normal(KEY, (1, 10, 10, 8))
+    w = jax.random.normal(jax.random.fold_in(KEY, 5), (3, 3, 8, 16))
+    codes, scales = quantize_per_channel(w)
+    folded = ops.dispatch("ilpm", x, codes.astype(jnp.float32),
+                          impl="pallas", scale=scales,
+                          bias=jnp.zeros((16,)))
+    direct = ref.conv2d_reference(x, dequantize(codes, scales),
+                                  padding="VALID")
+    np.testing.assert_allclose(np.asarray(folded), np.asarray(direct),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_quantize_params_folds_scales_and_reports():
+    from repro.configs import get, tiny_variant
+    from repro.core import InferenceEngine
+    from repro.quant import quantization_error, quantize_params
+
+    cfg = tiny_variant(get("resnet18"))
+    eng = InferenceEngine(cfg)
+    qparams, report = quantize_params(eng.params)
+    assert report  # conv sites were found
+    for name, q in report.items():
+        assert q.codes.dtype == jnp.int8
+        assert q.storage_bytes < q.codes.size * 4  # beats fp32 storage
+    assert max(quantization_error(eng.params, report).values()) < 0.02
+    # the quantized tree runs the unchanged forward on the same plan
+    qeng = InferenceEngine(cfg, params=qparams, plan=eng.plan)
+    img = jax.random.normal(KEY, (32, 32, 3))
+    y = np.asarray(eng.run(img), np.float32)
+    yq = np.asarray(qeng.run(img), np.float32)
+    rel = np.abs(y - yq).max() / (np.abs(y).max() + 1e-12)
+    assert rel < 0.05, rel  # weight-only int8: small logit perturbation
+
+
+# ----------------------------------------------------------------------
+# serving precision knob
+
+
+def test_server_precision_knob_routes_to_dtype_variant():
+    from repro.serving import Server
+
+    img = jax.random.normal(KEY, (32, 32, 3))
+    with Server(tiny=True, window_ms=5.0) as server:
+        y16 = server.run("resnet18", img, dtype="bfloat16")
+        assert y16.dtype == jnp.bfloat16
+        y32 = server.run("resnet18", img)
+        assert y32.dtype == jnp.float32
+        keys = server.stats()["cache"]["keys"]
+        assert any("bfloat16" in k for k in keys)
+        assert any("float32" in k for k in keys)
+        # two engines (one per precision), each tuned under its own plan
+        assert server.stats()["cache"]["misses"] == 2
+
+
+def test_stream_session_reports_dtype():
+    from repro.serving import Server
+
+    with Server(tiny=True) as server:
+        s = server.open_stream("resnet18", fps=30.0, sim_compute_s=0.001,
+                               dtype="bfloat16")
+        assert s.stats()["dtype"] == "bfloat16"
+        s.close()

@@ -76,13 +76,26 @@ def test_cache_lru_evicts_beyond_capacity():
 
 
 def test_cache_plan_reuse_across_dtype_variants():
-    """(network, input_size) keys the plan; dtype only keys the engine."""
+    """(network, input_size, compute_dtype) keys the plan. A variant
+    differing only in param *storage* dtype shares the tuned plan (it was
+    tuned for the compute dtype, which is what the kernels stream); a
+    variant with a different *compute* dtype must NOT — its ConvSpecs
+    carry the dtype and its byte traffic differs. The seed keyed plans by
+    geometry alone, silently deploying fp32 choices onto bf16 engines."""
+    from repro.core import with_precision
+
     cache = EngineCache(capacity=4)
     e32 = cache.get(RESNET)
-    e16 = cache.get(RESNET.replace(param_dtype="bfloat16"))
-    assert e16 is not e32  # distinct engine cache entries
-    assert e16.plan is e32.plan  # shared tuned plan: no second tuning
-    assert cache.misses == 2
+    e_store16 = cache.get(RESNET.replace(param_dtype="bfloat16"))
+    assert e_store16 is not e32  # distinct engine cache entries
+    assert e_store16.plan is e32.plan  # storage-only variant: no re-tune
+
+    e_bf16 = cache.get(with_precision(RESNET, "bfloat16"))
+    assert e_bf16 is not e32
+    assert e_bf16.plan is not e32.plan  # compute dtype gets its own plan
+    assert {s.dtype for s in e_bf16.plan.specs.values()} == {"bfloat16"}
+    assert {s.dtype for s in e32.plan.specs.values()} == {"float32"}
+    assert cache.misses == 3
 
 
 # ----------------------------------------------------------------------

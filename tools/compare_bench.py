@@ -5,7 +5,7 @@ Usage:  python tools/compare_bench.py BASELINE CANDIDATE
             [--proxy-tolerance 0.25] [--est-tolerance 0.10]
             [--miss-tolerance 0.0]
 
-Two artifact kinds are accepted, auto-detected from the payload:
+Three artifact kinds are accepted, auto-detected from the payload:
 
   * **conv** (``BENCH_conv.json``, has ``layers``) — the per-layer
     algorithm/cost gate described below;
@@ -13,7 +13,14 @@ Two artifact kinds are accepted, auto-detected from the payload:
     deadline gate: per scenario, the simulated-clock deadline-miss rate
     and frame-drop rate must not exceed the baseline by more than
     ``--miss-tolerance`` (absolute; the simulation is deterministic, so
-    the default tolerance is 0).
+    the default tolerance is 0);
+  * **quant** (``BENCH_quant.json``, has ``rows``) — the
+    accuracy-vs-speed gate: per precision row, top-1 agreement with the
+    fp32 reference must not drop below the baseline by more than
+    ``--agreement-tolerance`` (absolute), the max relative logit error
+    must not blow up (> 2x baseline and above a 1e-4 floor), no site may
+    newly fall back to ``xla`` in a reduced precision, and the
+    cost-model ``est_time_s`` gates like conv's (``--est-tolerance``).
 
 Checks, over the layers present in BOTH files (new/removed layers are
 informational, so adding a network or a conv site never breaks the gate):
@@ -139,6 +146,80 @@ def compare_streaming(baseline: dict, candidate: dict, *,
     return problems, notes
 
 
+def compare_quant(baseline: dict, candidate: dict, *,
+                  agreement_tolerance: float = 0.13,
+                  est_tolerance: float = 0.10) -> tuple[list[str],
+                                                        list[str]]:
+    """Quant-artifact gate: per precision row (matched by dtype),
+
+      * top-1 agreement with the fp32 reference must not drop below the
+        baseline by more than ``agreement_tolerance`` (absolute — the
+        default allows one flipped image out of the standard 8, tolerating
+        cross-platform float wiggle without masking a real accuracy loss);
+      * max relative logit error must not exceed 2x the baseline once it
+        is above a 1e-4 floor (fp32's own row sits at ~0 — the floor keeps
+        harmless last-ulp noise from tripping the 2x ratio);
+      * a reduced-precision row must not *newly* report xla fallback
+        sites: a tuned site escaping the kernel path only in low
+        precision is exactly the regression this artifact exists to catch;
+      * cost-model ``est_time_s`` gates like the conv artifact's
+        (``est_tolerance``, relative) — the speed half of the trade.
+
+    -> (problems, notes)."""
+    problems, notes = [], []
+    base = {r["dtype"]: r for r in baseline["rows"]}
+    cand = {r["dtype"]: r for r in candidate["rows"]}
+    common = sorted(base.keys() & cand.keys())
+    if not common:
+        return ["no common precision rows between baseline and candidate"], \
+            notes
+    for only, rows in (("baseline", base.keys() - cand.keys()),
+                       ("candidate", cand.keys() - base.keys())):
+        if rows:
+            notes.append(f"precision rows only in {only} (skipped): "
+                         f"{sorted(rows)}")
+    for dt in common:
+        b, c = base[dt], cand[dt]
+        b_agree, c_agree = b["top1_agreement"], c["top1_agreement"]
+        if c_agree < b_agree - agreement_tolerance:
+            problems.append(
+                f"{dt}: top-1 agreement regressed {b_agree:.3f} -> "
+                f"{c_agree:.3f} (> -{agreement_tolerance:.2f} allowed)")
+        elif c_agree != b_agree:
+            notes.append(f"{dt}: top-1 agreement changed "
+                         f"{b_agree:.3f} -> {c_agree:.3f}")
+        b_err, c_err = b["logit_rel_err"], c["logit_rel_err"]
+        if c_err > max(2 * b_err, 1e-4):
+            problems.append(
+                f"{dt}: logit rel err blew up {b_err:.2e} -> {c_err:.2e} "
+                f"(> 2x baseline allowed)")
+        new_xla = sorted(set(c.get("xla_sites", []))
+                         - set(b.get("xla_sites", [])))
+        if new_xla:
+            problems.append(
+                f"{dt}: sites newly fell back to xla in this precision: "
+                f"{new_xla}")
+        b_est, c_est = b.get("est_time_s"), c.get("est_time_s")
+        if b_est and c_est is not None \
+                and c_est > b_est * (1 + est_tolerance):
+            problems.append(
+                f"{dt}: cost-model est_time regressed "
+                f"{c_est / b_est - 1:+.1%} (> {est_tolerance:.0%} allowed)")
+        if b.get("weight_bytes") != c.get("weight_bytes"):
+            notes.append(f"{dt}: weight bytes changed "
+                         f"{b.get('weight_bytes')} -> "
+                         f"{c.get('weight_bytes')}")
+    return problems, notes
+
+
+def _kind(payload: dict) -> str:
+    if "scenarios" in payload:
+        return "streaming"
+    if "rows" in payload:
+        return "quant"
+    return "conv"
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline")
@@ -150,20 +231,29 @@ def main(argv=None) -> int:
     ap.add_argument("--miss-tolerance", type=float, default=0.0,
                     help="allowed absolute deadline-miss/drop rate growth "
                          "(streaming artifacts)")
+    ap.add_argument("--agreement-tolerance", type=float, default=0.13,
+                    help="allowed absolute top-1 agreement drop per "
+                         "precision row (quant artifacts)")
     args = ap.parse_args(argv)
     with open(args.baseline) as f:
         baseline = json.load(f)
     with open(args.candidate) as f:
         candidate = json.load(f)
-    streaming = "scenarios" in baseline, "scenarios" in candidate
-    if streaming[0] != streaming[1]:
-        print("REGRESSION: baseline and candidate are different artifact "
-              "kinds (conv vs streaming)", file=sys.stderr)
+    kinds = _kind(baseline), _kind(candidate)
+    if kinds[0] != kinds[1]:
+        print(f"REGRESSION: baseline and candidate are different artifact "
+              f"kinds ({kinds[0]} vs {kinds[1]})", file=sys.stderr)
         return 1
-    if all(streaming):
+    if kinds[0] == "streaming":
         problems, notes = compare_streaming(
             baseline, candidate, miss_tolerance=args.miss_tolerance)
         what = f"{len(candidate['scenarios'])} scenarios"
+    elif kinds[0] == "quant":
+        problems, notes = compare_quant(
+            baseline, candidate,
+            agreement_tolerance=args.agreement_tolerance,
+            est_tolerance=args.est_tolerance)
+        what = f"{len(candidate['rows'])} precision rows"
     else:
         problems, notes = compare(baseline, candidate,
                                   proxy_tolerance=args.proxy_tolerance,
