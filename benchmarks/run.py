@@ -81,11 +81,20 @@ def _proxy_time(spec, choice, repeats=2):
 
 def emit_json(path, config="resnet18"):
     """Tune the tiny variant of ``config`` and dump the per-layer plan +
-    proxy timings to ``path`` (the BENCH_conv.json CI artifact)."""
+    proxy timings to ``path`` (the BENCH_conv.json CI artifact).
+
+    Besides the per-conv ``layers`` rows, the artifact carries one
+    ``blocks`` row per fusible block site — fused or not — comparing the
+    fused megakernel's cost-model estimates against the per-layer
+    constituent sum (plus the unfused shortcut-add pass where the block
+    carries a residual). ``tools/compare_bench.py`` gates on these rows: a
+    previously-fused site regressing to per-layer fails CI, and every
+    fused row's byte estimate must sit below its per-layer sum.
+    """
     from dataclasses import asdict
 
     from repro.configs import get, tiny_variant
-    from repro.core import InferenceEngine
+    from repro.core import InferenceEngine, autotune
 
     cfg = tiny_variant(get(config))
     eng = InferenceEngine(cfg)
@@ -108,12 +117,34 @@ def emit_json(path, config="resnet18"):
         })
     timed = [l["interpret_time_s"] for l in layers
              if l["interpret_time_s"] is not None]
+    blocks = []
+    for name, bspec in eng._block_specs():
+        ch = plan.block_choices.get(name)
+        per_layer_bytes = sum(
+            c.est_bytes for c in autotune.block_constituents(
+                bspec, epilogue=True)) + bspec.residual_pass_bytes
+        blocks.append({
+            "block": name,
+            "kind": bspec.kind,
+            "fused": ch is not None,
+            "algorithm": ch.algorithm if ch else None,
+            "params": dict(ch.params) if ch else {},
+            "est_time_s": ch.est_time if ch else None,
+            "est_bytes": ch.est_bytes if ch else None,
+            "vmem_bytes": ch.vmem if ch else None,
+            "per_layer_est_time_s": autotune.block_baseline_time(
+                bspec, epilogue=True),
+            "per_layer_est_bytes": per_layer_bytes,
+            "saved_bytes": bspec.saved_bytes,
+            "spec": asdict(bspec),
+        })
     payload = {
         "config": cfg.name,
         "mode": plan.mode,
         "n_sites": len(layers),
         "algorithms": sorted({l["algorithm"] for l in layers}),
         "xla_sites": [l["layer"] for l in layers if l["algorithm"] == "xla"],
+        "fused_sites": [b["block"] for b in blocks if b["fused"]],
         "totals": {
             "est_time_s": sum(l["est_time_s"] for l in layers),
             "est_bytes": sum(l["est_bytes"] for l in layers),
@@ -121,12 +152,14 @@ def emit_json(path, config="resnet18"):
             "interpret_time_s": sum(timed),
         },
         "layers": layers,
+        "blocks": blocks,
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {path}: {payload['n_sites']} sites "
           f"({', '.join(payload['algorithms'])}), "
-          f"{len(payload['xla_sites'])} xla fallbacks")
+          f"{len(payload['xla_sites'])} xla fallbacks, "
+          f"{len(payload['fused_sites'])}/{len(blocks)} block sites fused")
 
 
 def emit_serving_json(path, networks=("resnet18", "mobilenet_v2"),

@@ -8,7 +8,7 @@ the ConvSpec key, and the single-image inference engine.
 from repro.core.algorithms import conv2d  # noqa: F401
 from repro.core.autotune import (  # noqa: F401
     Choice, TuningPlan, build_plan, cost_model_select, measured_select,
-    select)
-from repro.core.convspec import ConvSpec  # noqa: F401
+    select, select_block)
+from repro.core.convspec import ConvSpec, FusedBlockSpec  # noqa: F401
 from repro.core.dtypes import element_size, with_precision  # noqa: F401
 from repro.core.engine import InferenceEngine  # noqa: F401

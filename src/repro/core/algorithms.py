@@ -128,3 +128,41 @@ def conv2d(x, w, *, stride=1, padding="SAME", algorithm="auto", impl="auto",
             params["u"] = u
     return ops.dispatch(algorithm, xp, w, impl=impl, stride=stride,
                         **ep, **params)
+
+
+# ---- fused blocks: one dispatch where the per-layer path makes 2-3 ----
+
+def block_inverted_residual(x, p, choice, *, stride=1, residual=False,
+                            impl="auto"):
+    """Run a whole inverted-residual block as one fused dispatch.
+
+    ``p`` is the model's param subtree for the block — optional ``pw1``
+    plus ``dw``/``pw2``, each a ``{"w", "scale", "bias"}`` conv site —
+    flattened here into the stage-keyed weights dict the block kernel
+    takes. ``choice`` is the plan's block-site Choice (algorithm +
+    tuned ``block_m``); activations are MobileNetV2's fixed ReLU6 /
+    linear-projection pattern, so they're call-site constants, not plan
+    state.
+    """
+    weights = {"wdw": p["dw"]["w"], "sdw": p["dw"]["scale"],
+               "bdw": p["dw"]["bias"],
+               "w2": p["pw2"]["w"], "s2": p["pw2"]["scale"],
+               "b2": p["pw2"]["bias"]}
+    if "pw1" in p:
+        weights.update({"w1": p["pw1"]["w"], "s1": p["pw1"]["scale"],
+                        "b1": p["pw1"]["bias"]})
+    return ops.dispatch_block(choice.algorithm, x, weights, impl=impl,
+                              stride=stride, residual=residual, act="relu6",
+                              out_act=None, **dict(choice.params))
+
+
+def block_residual_conv(x, p, choice, *, res, impl="auto"):
+    """Run a ResNet block's final conv with the shortcut add + outer ReLU
+    fused into its output write. ``p`` is the conv's ``{"w", "scale",
+    "bias"}`` site; ``res`` the identity/projection branch; SAME padding
+    applied here (the fused kernel is stride-1 by construction)."""
+    w = p["w"]
+    xp = ref.pad_same(x, w.shape[0], w.shape[1])
+    weights = {"w": w, "scale": p["scale"], "bias": p["bias"]}
+    return ops.dispatch_block(choice.algorithm, xp, weights, impl=impl,
+                              res=res, act="relu", **dict(choice.params))

@@ -24,7 +24,7 @@ import logging
 import time
 from dataclasses import asdict, dataclass, field
 
-from repro.core.convspec import ConvSpec
+from repro.core.convspec import ConvSpec, FusedBlockSpec
 from repro.core.dtypes import ACC_BYTES
 
 log = logging.getLogger(__name__)
@@ -319,6 +319,128 @@ def measured_select(spec: ConvSpec, x=None, w=None, *, repeats=3,
     return best
 
 
+# ----------------------------------------------------------------------
+# Block-level candidates: fused megakernels vs the per-layer chain.
+
+
+def block_constituents(bspec: FusedBlockSpec, *, epilogue=True,
+                       peak_flops=PEAK_FLOPS, hbm_bw=HBM_BW):
+    """The per-layer Choices the fused block competes against — one tuned
+    Choice per constituent conv, costed with the same epilogue flag the
+    conv sites themselves tune under (apples-to-apples)."""
+    return [cost_model_select(cs, peak_flops=peak_flops, hbm_bw=hbm_bw,
+                              epilogue=epilogue)
+            for _, cs in bspec.conv_specs()]
+
+
+def block_baseline_time(bspec: FusedBlockSpec, *, epilogue=True,
+                        peak_flops=PEAK_FLOPS, hbm_bw=HBM_BW) -> float:
+    """Roofline time of the *unfused* path: the summed per-layer tuned
+    choices plus — when the block carries a residual — the separate
+    shortcut-add pass (a pure HBM read-modify-write the fused kernel
+    folds into its output write for free)."""
+    t = sum(c.est_time for c in block_constituents(
+        bspec, epilogue=epilogue, peak_flops=peak_flops, hbm_bw=hbm_bw))
+    return t + bspec.residual_pass_bytes / hbm_bw
+
+
+def _block_candidates(bspec: FusedBlockSpec, epilogue=True,
+                      peak_flops=PEAK_FLOPS, hbm_bw=HBM_BW):
+    """Enumerate (algorithm, params, hbm_bytes, flops, vmem_working_set)
+    for the fused kernel at this block.
+
+    The byte estimate is the charging rule the whole tentpole hangs on:
+    the fused candidate costs exactly the per-layer constituent sum MINUS
+    ``bspec.saved_bytes`` — the expanded-tensor (inverted residual) or
+    conv-output (residual conv) round-trips that now stay in VMEM, at the
+    block's compute dtype. The residual-conv kernel still pays one HBM
+    read of the shortcut operand (it is a *different* tensor, unlike the
+    inverted residual's identity, which is the already-resident input);
+    per-layer, that read is part of ``residual_pass_bytes`` charged to the
+    baseline instead.
+
+    ``block_m`` slabs must divide the expanded width (a ragged slab would
+    double-count the projection accumulation), enumerated LARGEST first:
+    every slab width moves the same bytes, so the first feasible
+    candidate wins ties and the single-slab variant — whose projection
+    reduction order is bitwise-identical to the per-layer chain — is
+    preferred whenever it fits VMEM.
+    """
+    el = bspec.element_size
+    constituents = block_constituents(bspec, epilogue=epilogue,
+                                      peak_flops=peak_flops, hbm_bw=hbm_bw)
+    base_bytes = sum(c.est_bytes for c in constituents)
+    flops = sum(c.est_flops for c in constituents)
+    B = bspec.batch
+    OH, OW = bspec.out_h, bspec.out_w
+    P = OH * OW
+    cands = []
+    if bspec.kind == "residual_conv":
+        bts = base_bytes - bspec.saved_bytes \
+            + el * B * P * bspec.cout  # the shortcut-branch read
+        hp, wp = bspec.h + bspec.r - 1, bspec.w + bspec.s - 1
+        for tk in (128, 256, 512):
+            tk = min(tk, bspec.cout)
+            vmem = hp * wp * bspec.cin * el \
+                + bspec.r * bspec.s * bspec.cin * tk * el \
+                + 2 * P * tk * el + P * tk * ACC_BYTES
+            cands.append(("fused_residual_conv", (("block_k", tk),),
+                          bts, flops, vmem))
+            if tk == bspec.cout:
+                break
+        return cands
+    bts = base_bytes - bspec.saved_bytes
+    hp = (OH - 1) * bspec.stride + bspec.r
+    wp = (OW - 1) * bspec.stride + bspec.s
+    if bspec.expanded:
+        tms = [bspec.mid] + [t for t in (512, 256, 128)
+                             if t < bspec.mid and bspec.mid % t == 0]
+    else:
+        tms = [bspec.mid]  # t == 1: the slab is the unsliced input
+    for tm in tms:
+        vmem = el * (bspec.h * bspec.w * bspec.cin + bspec.cin * tm
+                     + hp * wp * tm + bspec.r * bspec.s * tm
+                     + tm * bspec.cout + P * tm) \
+            + ACC_BYTES * P * (tm + bspec.cout)
+        cands.append(("fused_inverted_residual", (("block_m", tm),),
+                      bts, flops, vmem))
+    return cands
+
+
+def select_block(bspec: FusedBlockSpec, mode: str = "cost_model", *,
+                 epilogue=True, peak_flops=PEAK_FLOPS, hbm_bw=HBM_BW,
+                 vmem_bytes=VMEM_BYTES):
+    """Fused-vs-per-layer decision for one block site -> Choice | None.
+
+    Returns the fused kernel's Choice when its roofline time beats the
+    per-layer baseline (tuned constituents + unfused shortcut-add pass)
+    AND a feasible slab width exists; ``None`` means keep the per-layer
+    plan at this site. Memoized like ``select``. Block selection is
+    cost-model in both modes (wall-clock racing of whole fused blocks
+    needs per-stage synth weights — a measured-mode follow-up); the
+    *constituent* baseline already reflects the same cost model the
+    per-layer sites tuned under, so the comparison stays consistent.
+    """
+    assert mode in MODES, f"unknown tuning mode {mode!r}; want one of {MODES}"
+    key = (bspec, "block", epilogue)
+    if key in _CACHE:
+        return _CACHE[key]
+    best = None
+    for algo, params, bts, flops, vmem in _block_candidates(
+            bspec, epilogue, peak_flops=peak_flops, hbm_bw=hbm_bw):
+        if vmem > vmem_bytes:
+            continue
+        t = max(flops / peak_flops, bts / hbm_bw)
+        if best is None or t < best.est_time:
+            best = Choice(algo, params, t, bts, flops, vmem)
+    baseline = block_baseline_time(bspec, epilogue=epilogue,
+                                   peak_flops=peak_flops, hbm_bw=hbm_bw)
+    if best is not None and best.est_time >= baseline:
+        best = None  # fusion saves nothing here: keep per-layer
+    _CACHE[key] = best
+    return best
+
+
 _CACHE: dict[tuple, Choice] = {}
 
 MODES = ("cost_model", "measured")
@@ -348,7 +470,8 @@ def select(spec: ConvSpec, mode: str = "cost_model", *, repeats=3,
 # ----------------------------------------------------------------------
 # Tuning plans: tune once offline, serialize, deploy many times.
 
-PLAN_VERSION = 1
+PLAN_VERSION = 2  # v2 adds the optional "blocks" section (fused megakernels)
+_READABLE_VERSIONS = (1, 2)  # v1 plans (no blocks) still deploy
 
 
 @dataclass
@@ -358,30 +481,49 @@ class TuningPlan:
     ``choices`` maps layer name -> Choice and is what the model forward
     consumes for per-layer dispatch; ``specs`` keeps the ConvSpec each
     choice was tuned for (provenance + validation on reload).
+
+    ``block_choices``/``block_specs`` are the same contract one level up:
+    block-site name (``<block>.block``) -> fused-megakernel Choice /
+    FusedBlockSpec. A site present here is one the tuner decided to FUSE —
+    its constituent convs keep their per-layer entries in ``choices`` (so
+    the same plan deploys on engines without block support), but the
+    forward dispatches the single fused kernel instead.
     """
     mode: str = "cost_model"
     specs: dict[str, ConvSpec] = field(default_factory=dict)
     choices: dict[str, Choice] = field(default_factory=dict)
+    block_specs: dict[str, FusedBlockSpec] = field(default_factory=dict)
+    block_choices: dict[str, Choice] = field(default_factory=dict)
 
     def algorithms(self) -> dict[str, str]:
         return {name: ch.algorithm for name, ch in self.choices.items()}
+
+    def block_algorithms(self) -> dict[str, str]:
+        return {name: ch.algorithm
+                for name, ch in self.block_choices.items()}
 
     def to_json(self) -> str:
         layers = {name: {"spec": asdict(self.specs[name]),
                          "choice": self.choices[name].to_dict()}
                   for name in self.specs}
+        blocks = {name: {"spec": asdict(self.block_specs[name]),
+                         "choice": self.block_choices[name].to_dict()}
+                  for name in self.block_specs}
         return json.dumps({"version": PLAN_VERSION, "mode": self.mode,
-                           "layers": layers}, indent=2)
+                           "layers": layers, "blocks": blocks}, indent=2)
 
     @classmethod
     def from_json(cls, text: str) -> "TuningPlan":
         d = json.loads(text)
-        if d.get("version") != PLAN_VERSION:
+        if d.get("version") not in _READABLE_VERSIONS:
             raise ValueError(f"unsupported plan version {d.get('version')!r}")
         plan = cls(mode=d["mode"])
         for name, layer in d["layers"].items():
             plan.specs[name] = ConvSpec(**layer["spec"])
             plan.choices[name] = Choice.from_dict(layer["choice"])
+        for name, block in d.get("blocks", {}).items():  # absent in v1
+            plan.block_specs[name] = FusedBlockSpec(**block["spec"])
+            plan.block_choices[name] = Choice.from_dict(block["choice"])
         return plan
 
     def save(self, path) -> None:
@@ -395,7 +537,8 @@ class TuningPlan:
 
 
 def build_plan(named_specs, mode: str = "cost_model", *, repeats=3,
-               noise_floor=0.5, epilogue=False) -> TuningPlan:
+               noise_floor=0.5, epilogue=False,
+               block_specs=None) -> TuningPlan:
     """Tune every (name, ConvSpec) pair into a TuningPlan.
 
     ``named_specs`` is any iterable of ``(layer_name, ConvSpec)`` — the
@@ -409,6 +552,13 @@ def build_plan(named_specs, mode: str = "cost_model", *, repeats=3,
     ``repeats``/``noise_floor`` only matter for ``mode="measured"``;
     ``epilogue=True`` costs each site as the fused conv+BN+act variant
     (what the model forwards actually run — the engine tunes this way).
+
+    ``block_specs`` — an optional iterable of ``(block_site_name,
+    FusedBlockSpec)`` (the model's ``block_specs`` enumeration) — turns on
+    block-level tuning: each site goes through ``select_block``, and only
+    sites where the fused megakernel beats the per-layer baseline get a
+    ``block_choices`` entry. Per-conv entries are kept for every site
+    either way, so the plan stays deployable with fusion ignored.
     """
     plan = TuningPlan(mode=mode)
     for name, spec in named_specs:
@@ -416,4 +566,9 @@ def build_plan(named_specs, mode: str = "cost_model", *, repeats=3,
         plan.choices[name] = select(spec, mode=mode, repeats=repeats,
                                     noise_floor=noise_floor,
                                     epilogue=epilogue)
+    for name, bspec in (block_specs or ()):
+        choice = select_block(bspec, mode=mode, epilogue=epilogue)
+        if choice is not None:
+            plan.block_specs[name] = bspec
+            plan.block_choices[name] = choice
     return plan

@@ -100,3 +100,125 @@ class ConvSpec:
             f"image channels {c} not divisible by filter depth {c_per_group}")
         return cls(h=h, w=ww, c=c, k=k, r=r, s=s, stride=stride, batch=b,
                    dtype=str(x.dtype), groups=c // c_per_group)
+
+
+@dataclass(frozen=True)
+class FusedBlockSpec:
+    """The tuning key for a *block-level* fused kernel candidate.
+
+    Two kinds:
+
+      * ``inverted_residual`` — MobileNet's expand(1x1) -> depthwise(RxS,
+        stride 1|2) -> project(1x1) chain, optionally with the identity
+        residual folded into the project write (``residual=True`` when
+        stride == 1 and cin == cout). ``mid`` is the expanded width
+        (``cin * t``); ``mid == cin`` models the t == 1 blocks that skip
+        the expansion conv.
+      * ``residual_conv`` — the second (stride-1) conv of a ResNet
+        basic/bottleneck block with the shortcut add and the outer ReLU
+        folded into its output write. ``mid`` is the conv's input width
+        (``cin == mid`` by construction), ``r``/``s`` its filter size
+        (3x3 for basic c2, 1x1 for bottleneck c3).
+
+    ``h``/``w`` are the *input* spatial dims of the fused region. ``dtype``
+    is part of the key exactly as for ``ConvSpec``: the saved-round-trip
+    accounting scales with the element width, so a bf16 block tunes (and
+    validates on deploy) separately from fp32.
+    """
+    kind: str
+    h: int
+    w: int
+    cin: int
+    mid: int
+    cout: int
+    r: int = 3
+    s: int = 3
+    stride: int = 1
+    residual: bool = False
+    batch: int = 1
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert self.kind in ("inverted_residual", "residual_conv"), self.kind
+        if self.kind == "residual_conv":
+            assert self.stride == 1 and self.residual, self
+            assert self.cin == self.mid, self
+        if self.residual and self.kind == "inverted_residual":
+            assert self.stride == 1 and self.cin == self.cout, self
+
+    @property
+    def expanded(self) -> bool:
+        """Whether the block has a distinct expansion conv (t > 1)."""
+        return self.kind == "inverted_residual" and self.mid != self.cin
+
+    @property
+    def out_h(self) -> int:
+        return -(-self.h // self.stride)  # SAME: ceil
+
+    @property
+    def out_w(self) -> int:
+        return -(-self.w // self.stride)
+
+    @property
+    def element_size(self) -> int:
+        return element_size(self.dtype)
+
+    def conv_specs(self) -> tuple:
+        """((name, ConvSpec), ...) — the per-layer constituents this fused
+        block replaces, in execution order. The names match the model's
+        ``conv_specs`` site suffixes (pw1/dw/pw2 or c2/c3) so the two
+        enumerations stay cross-referenceable."""
+        if self.kind == "residual_conv":
+            suffix = "c2" if (self.r, self.s) != (1, 1) else "c3"
+            return ((suffix, ConvSpec(
+                h=self.h, w=self.w, c=self.mid, k=self.cout, r=self.r,
+                s=self.s, batch=self.batch, dtype=self.dtype)),)
+        parts = []
+        if self.expanded:
+            parts.append(("pw1", ConvSpec(
+                h=self.h, w=self.w, c=self.cin, k=self.mid, r=1, s=1,
+                batch=self.batch, dtype=self.dtype)))
+        parts.append(("dw", ConvSpec(
+            h=self.h, w=self.w, c=self.mid, k=self.mid, r=self.r, s=self.s,
+            stride=self.stride, groups=self.mid, batch=self.batch,
+            dtype=self.dtype)))
+        parts.append(("pw2", ConvSpec(
+            h=self.out_h, w=self.out_w, c=self.mid, k=self.cout, r=1, s=1,
+            batch=self.batch, dtype=self.dtype)))
+        return tuple(parts)
+
+    @property
+    def saved_bytes(self) -> int:
+        """HBM round-trips the fusion eliminates, at the compute dtype.
+
+        ``inverted_residual``: the expanded intermediates never leave VMEM
+        — the expand output write + its (padded) depthwise read, and the
+        depthwise output write + its project read. Blocks without an
+        expansion conv (t == 1) only save the depthwise-output round-trip.
+
+        ``residual_conv``: the conv-output round-trip of the separate
+        shortcut-add pass (per-layer: write conv out, then read it back to
+        add the identity; fused: the accumulator adds the identity before
+        the single output write).
+        """
+        el = self.element_size
+        if self.kind == "residual_conv":
+            return 2 * el * self.batch * self.out_h * self.out_w * self.cout
+        hp = (self.out_h - 1) * self.stride + self.r
+        wp = (self.out_w - 1) * self.stride + self.s
+        saved = 0
+        if self.expanded:  # expand out (h*w) + padded depthwise in (hp*wp)
+            saved += el * self.batch * self.mid * (self.h * self.w + hp * wp)
+        # depthwise out + project in (both at the downsampled size)
+        saved += 2 * el * self.batch * self.out_h * self.out_w * self.mid
+        return saved
+
+    @property
+    def residual_pass_bytes(self) -> int:
+        """Traffic of the *unfused* shortcut-add pass (read conv output,
+        read identity, write sum) — charged to the per-layer baseline when
+        ``residual`` is set, since that is what the fused write avoids."""
+        if not self.residual:
+            return 0
+        return 3 * self.element_size * self.batch * self.out_h \
+            * self.out_w * self.cout

@@ -82,9 +82,15 @@ class InferenceEngine:
         # winograd_u rides as a jit *argument* (a pytree, like params),
         # not a closure constant: baked-in constants would be re-embedded
         # into every trace of every entry point below.
+        # The forward consumes ONE name->Choice dict: per-conv choices plus
+        # the tuner's block-level fusion decisions (`<block>.block` keys are
+        # disjoint from conv-site keys). At fused sites the forward
+        # dispatches the block megakernel and skips the constituent convs'
+        # entries entirely.
         fwd1 = functools.partial(
             self._model.forward, cfg=cfg, algorithm=algorithm,
-            plan=plan.choices if plan is not None else None)
+            plan={**plan.choices, **plan.block_choices}
+            if plan is not None else None)
         self._fwd = jax.jit(fwd1)
         # Batch-dim-tolerant entry for the serving layer: map the *exact*
         # single-image computation over the batch inside one jitted call
@@ -120,6 +126,14 @@ class InferenceEngine:
         """
         return self._model.conv_specs(self.cfg)
 
+    def _block_specs(self):
+        """(name, FusedBlockSpec) per fusible block site, or () for model
+        families without a block enumeration — block tuning is opt-in per
+        model module, and a model that never grows one simply keeps
+        per-layer plans."""
+        fn = getattr(self._model, "block_specs", None)
+        return fn(self.cfg) if fn is not None else ()
+
     def tune(self, mode="cost_model", **tune_kwargs) -> TuningPlan:
         """Build the per-layer TuningPlan (the offline step of §2.3).
 
@@ -127,10 +141,14 @@ class InferenceEngine:
         for measured mode (on real hardware use ``noise_floor=0`` for
         pure wall-clock selection). Sites are costed as their fused
         conv+BN+act variants (``epilogue=True``) because that is what the
-        model forwards dispatch.
+        model forwards dispatch. Block sites (the model's ``block_specs``
+        enumeration) tune alongside: sites where a fused megakernel beats
+        the per-layer baseline get ``block_choices`` entries.
         """
         return autotune.build_plan(self._conv_specs(), mode=mode,
-                                   epilogue=True, **tune_kwargs)
+                                   epilogue=True,
+                                   block_specs=self._block_specs(),
+                                   **tune_kwargs)
 
     def _site_params(self, name: str):
         """Resolve a plan layer name ('s0b1.c2') to its param subtree."""
@@ -180,6 +198,18 @@ class InferenceEngine:
                 "tuning plan coverage mismatch: missing=%s (these layers "
                 "fall back to untuned dispatch) extra=%s (ignored)",
                 sorted(missing), sorted(extra))
+        # Block sites: intersection-only (a plan with no/fewer fused sites
+        # just runs per-layer there — fusion is an optimization, never a
+        # coverage obligation), but a present block entry must match this
+        # network's geometry AND dtype exactly, same contract as convs.
+        our_blocks = dict(self._block_specs())
+        bad_blocks = {n for n, bspec in plan.block_specs.items()
+                      if n in our_blocks and our_blocks[n] != bspec}
+        if bad_blocks:
+            raise ValueError(
+                f"tuning plan was built for a different network/input "
+                f"size/dtype (engine dtype {self.cfg.dtype!r}); "
+                f"mismatched block specs for {sorted(bad_blocks)}")
 
     def save_plan(self, path) -> None:
         assert self.plan is not None, "engine has no plan to save"

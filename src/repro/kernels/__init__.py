@@ -11,5 +11,8 @@ One module per algorithm (pl.pallas_call + explicit BlockSpec VMEM tiling),
     winograd_conv  — F(2x2,3x3): transforms + 16 batched GEMMs
     causal_conv1d  — the technique in 1D (Mamba/Jamba conv stems)
     gemm           — tiled MXU matmul used by im2col/winograd phases
+    fused_block    — per-BLOCK megakernels (inverted residual with the
+                     expanded tensor VMEM-only; residual-add-fused conv);
+                     dispatched via ops.dispatch_block
 """
 from repro.kernels import ops, ref  # noqa: F401

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels import causal_conv1d as _cc
 from repro.kernels import depthwise_conv as _dw
+from repro.kernels import fused_block as _fb
 from repro.kernels import direct_conv as _dc
 from repro.kernels import ilpm_conv as _il
 from repro.kernels import im2col_conv as _im
@@ -126,9 +127,53 @@ def pointwise(x, w, *, impl="auto", stride=1, block_k=128, scale=None,
                               scale=scale, bias=bias, act=act)
 
 
+# ---- fused blocks (per-BLOCK kernels, not per-conv) ------------------
+#
+# Registered in their own BLOCK_ALGORITHMS table and dispatched through
+# ``dispatch_block``: block kernels take a *weights dict* (one entry per
+# fused stage) where the per-conv table takes a single filter tensor, so
+# sharing ``ALGORITHMS`` would break every caller that iterates it with
+# ``dispatch(algo, x, w)`` (the precision sweep, the spy fixtures).
+
+def fused_inverted_residual(x, weights, *, impl="auto", stride=1,
+                            block_m=512, residual=False, act="relu6",
+                            out_act=None):
+    """MobileNet expand->depthwise->project in one kernel launch.
+
+    ``x`` (B,H,W,Cin) *unpadded*; ``weights`` a dict: optional
+    ``w1``/``s1``/``b1`` (expansion conv + folded BN — absent for t == 1
+    blocks), ``wdw``/``sdw``/``bdw`` (depthwise), ``w2``/``s2``/``b2``
+    (projection, linear). ``block_m`` tiles the expanded width (the tuned
+    parameter); ``residual`` folds the identity add into the project
+    write (stride 1, Cin == Cout only).
+    """
+    if _use_pallas(impl):
+        return _fb.fused_inverted_residual(
+            x, weights, stride=stride, block_m=block_m, residual=residual,
+            act=act, out_act=out_act, interpret=_interp())
+    return ref.fused_inverted_residual(x, weights, stride=stride,
+                                       residual=residual, act=act,
+                                       out_act=out_act)
+
+
+def fused_residual_conv(x_padded, weights, *, impl="auto", res,
+                        block_k=128, act="relu"):
+    """ResNet block tail: the second conv with the shortcut add and outer
+    ReLU fused into its output write. ``x_padded`` SAME-padded (stride 1);
+    ``weights``: ``w``/``scale``/``bias``; ``res`` the shortcut branch."""
+    if _use_pallas(impl):
+        return _fb.fused_residual_conv(x_padded, weights, res=res,
+                                       block_k=block_k, act=act,
+                                       interpret=_interp())
+    return ref.fused_residual_conv(x_padded, weights, res=res, act=act)
+
+
 ALGORITHMS = {"ilpm": ilpm, "direct": direct, "im2col": im2col,
               "libdnn": libdnn, "winograd": winograd,
               "depthwise": depthwise, "pointwise": pointwise}
+
+BLOCK_ALGORITHMS = {"fused_inverted_residual": fused_inverted_residual,
+                    "fused_residual_conv": fused_residual_conv}
 
 # the paper's five contenders — interchangeable on any dense 3x3 conv;
 # the grouped family (depthwise/pointwise) has its own filter shapes
@@ -179,6 +224,33 @@ def dispatch(algorithm: str, x_padded, w, *, impl="auto", **params):
     """
     fn = ALGORITHMS[algorithm]
     return fn(x_padded, w, impl=impl, **kernel_params(algorithm, params))
+
+
+def block_kernel_params(algorithm: str, params: dict) -> dict:
+    """``kernel_params`` for the block-level table (same signature-filter
+    rule, so spy wrappers declaring ``**kwargs`` opt out identically)."""
+    import inspect
+
+    accepted = inspect.signature(BLOCK_ALGORITHMS[algorithm]).parameters
+    if any(p.kind is inspect.Parameter.VAR_KEYWORD
+           for p in accepted.values()):
+        return dict(params)
+    return {k: v for k, v in params.items() if k in accepted}
+
+
+def dispatch_block(algorithm: str, x, weights, *, impl="auto", **params):
+    """Block-level twin of ``dispatch``: one call = one fused block.
+
+    The engine's jitted forward funnels every *block* site the plan chose
+    to fuse through here (per-conv sites keep going through ``dispatch``).
+    ``weights`` is the block's stage dict, ``params`` carries the tuned
+    knob (``block_m``/``block_k``) plus call-site geometry
+    (``stride``/``residual``/``res``/``act``/``out_act``), filtered per
+    algorithm exactly like the per-conv funnel. ``BLOCK_ALGORITHMS`` is
+    looked up at call time so the dispatch-spy fixtures can wrap it.
+    """
+    fn = BLOCK_ALGORITHMS[algorithm]
+    return fn(x, weights, impl=impl, **block_kernel_params(algorithm, params))
 
 
 # ---- 1D ops used by the model substrate ------------------------------

@@ -252,6 +252,46 @@ def pointwise_conv(x, w, *, stride=1):
 
 
 # ----------------------------------------------------------------------
+# fused blocks: the per-layer chains the megakernels replace, composed
+# stage for stage from the references above (same casts, same op order —
+# these ARE the per-layer semantics, so fused-vs-composed parity checks
+# the fusion and nothing else)
+
+
+def fused_inverted_residual(x, weights, *, stride=1, residual=False,
+                            act="relu6", out_act=None):
+    """Composed per-layer reference of the inverted-residual megakernel:
+    expand (1x1 + BN/act) -> SAME pad -> depthwise (+ BN/act) -> project
+    (1x1 + BN, linear) -> optional identity add. ``weights`` as in
+    ``fused_block.fused_inverted_residual``; each stage's epilogue runs
+    in fp32 and casts back to the compute dtype, exactly like the
+    per-layer kernels' output writes."""
+    h = x
+    if weights.get("w1") is not None:
+        h = apply_epilogue(pointwise_conv(h, weights["w1"]),
+                           weights.get("s1"), weights.get("b1"), act)
+    wdw = weights["wdw"]
+    h = pad_same(h, wdw.shape[0], wdw.shape[1], stride)
+    h = apply_epilogue(depthwise_conv(h, wdw, stride=stride),
+                       weights.get("sdw"), weights.get("bdw"), act)
+    h = apply_epilogue(pointwise_conv(h, weights["w2"]),
+                       weights.get("s2"), weights.get("b2"), out_act)
+    if residual:
+        h = h + x
+    return h
+
+
+def fused_residual_conv(x_padded, weights, *, res, act="relu"):
+    """Composed per-layer reference of the residual-conv megakernel: the
+    conv + folded BN writes at the compute dtype, then the shortcut add
+    and outer activation run as a separate (per-layer: extra HBM pass)
+    step in the compute dtype."""
+    h = apply_epilogue(ilpm_conv(x_padded, weights["w"]),
+                       weights.get("scale"), weights.get("bias"), None)
+    return apply_act(h + res, act)
+
+
+# ----------------------------------------------------------------------
 # depthwise causal conv1d (Mamba stem) — the paper's technique in 1D
 
 

@@ -87,6 +87,29 @@ def conv_specs(cfg):
             for name, sp in specs]
 
 
+def block_specs(cfg):
+    """(name, FusedBlockSpec) per inverted-residual block — the block-site
+    enumeration the engine hands to ``build_plan(block_specs=...)``. Sites
+    are keyed ``<block>.block`` (e.g. "s0b0.block"), disjoint from the
+    per-conv keys, so a plan can carry both and the forward prefers the
+    fused choice where one exists. Geometry mirrors ``conv_specs`` (the
+    post-stem size walk); ``residual`` is set exactly where the forward
+    adds the identity (stride 1, cin == cout); dtype stamps the key the
+    same way as the conv specs.
+    """
+    from repro.core.convspec import FusedBlockSpec
+
+    size = -(-cfg.extra["img"] // 2)  # post-stem (stride-2) size
+    specs = []
+    for name, cin, mid, cout, stride in _blocks(cfg):
+        specs.append((f"{name}.block", FusedBlockSpec(
+            "inverted_residual", h=size, w=size, cin=cin, mid=mid,
+            cout=cout, stride=stride,
+            residual=(stride == 1 and cin == cout), dtype=cfg.dtype)))
+        size = -(-size // stride)
+    return specs
+
+
 def forward(params, cfg, images, *, algorithm="auto", plan=None,
             winograd_u=None):
     """images: (B,H,W,3) NHWC -> logits (B, classes); a single unbatched
@@ -102,7 +125,14 @@ def forward(params, cfg, images, *, algorithm="auto", plan=None,
     (the MobileNetV2 nonlinearity), fused into each conv's epilogue;
     projection convs are linear. The strided dense stem runs the strided
     ilpm/direct kernels under the tuner, not the XLA escape hatch.
+
+    A ``<block>.block`` plan entry (from ``build_plan(block_specs=...)``)
+    overrides the block's 2-3 per-conv entries: the whole inverted
+    residual — identity add included — runs as ONE fused dispatch, its
+    expanded intermediate never leaving VMEM.
     """
+    from repro.core import algorithms
+
     single = images.ndim == 3
     if single:
         images = images[None]
@@ -113,6 +143,12 @@ def forward(params, cfg, images, *, algorithm="auto", plan=None,
               choice=plan.get("stem"), act="relu6", u=wu.get("stem"))
     for name, cin, mid, cout, stride in _blocks(cfg):
         p = params[name]
+        residual = stride == 1 and cin == cout
+        bch = plan.get(f"{name}.block")
+        if bch is not None:  # tuner fused this site: one dispatch, not 3
+            x = algorithms.block_inverted_residual(
+                x, p, bch, stride=stride, residual=residual)
+            continue
         h = x
         if "pw1" in p:
             h = _conv(p["pw1"], h, 1, algorithm,
@@ -120,7 +156,7 @@ def forward(params, cfg, images, *, algorithm="auto", plan=None,
         h = _conv(p["dw"], h, stride, algorithm,
                   choice=plan.get(f"{name}.dw"), act="relu6")
         h = _conv(p["pw2"], h, 1, algorithm, choice=plan.get(f"{name}.pw2"))
-        if stride == 1 and cin == cout:
+        if residual:
             h = h + x
         x = h
     x = _conv(params["head"], x, 1, algorithm, choice=plan.get("head"),

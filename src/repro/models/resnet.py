@@ -114,6 +114,36 @@ def conv_specs(cfg):
             for name, sp in specs]
 
 
+def block_specs(cfg):
+    """(name, FusedBlockSpec) per residual block — the block-site
+    enumeration for ``build_plan(block_specs=...)``, keyed
+    ``<block>.block``. Each site is the block's *final* conv (basic c2:
+    3x3, bottleneck c3: 1x1 — always stride 1, since stage-entry
+    downsampling happens in the earlier conv) with the shortcut add and
+    the outer ReLU fused into its output write. Geometry mirrors
+    ``conv_specs``; dtype stamps the key identically."""
+    from repro.core.convspec import FusedBlockSpec
+
+    blocks = cfg.extra["blocks"]
+    bottleneck = cfg.extra["bottleneck"]
+    widths = [64, 128, 256, 512]
+    if bottleneck:
+        widths = [w * 4 for w in widths]
+    size = cfg.extra["img"] // 4  # stem stride 2, then 3x3/2 max-pool
+    specs = []
+    for si, n in enumerate(blocks):
+        cout = widths[si]
+        for bi in range(n):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            size = -(-size // stride)  # the final conv runs post-stride
+            mid = cout // 4 if bottleneck else cout
+            rs = 1 if bottleneck else 3
+            specs.append((f"s{si}b{bi}.block", FusedBlockSpec(
+                "residual_conv", h=size, w=size, cin=mid, mid=mid,
+                cout=cout, r=rs, s=rs, residual=True, dtype=cfg.dtype)))
+    return specs
+
+
 def _conv(p, x, stride, algorithm, padding="SAME", choice=None, act=None,
           u=None):
     """One conv site: folded-BN scale/bias and the activation ride into
@@ -127,23 +157,34 @@ def _conv(p, x, stride, algorithm, padding="SAME", choice=None, act=None,
 
 
 def _block(p, x, bottleneck, stride, algorithm, name="", plan=None, wu=None):
+    """A ``<name>.block`` plan entry replaces the block's final conv AND
+    the shortcut add + outer ReLU with one fused dispatch (see
+    ``algorithms.block_residual_conv``); otherwise the tail runs as the
+    per-layer conv followed by a separate XLA add/ReLU pass."""
+    from repro.core import algorithms
+
     plan = plan or {}
     wu = wu or {}
     idn = x
     if "proj" in p:
         idn = _conv(p["proj"], x, stride, algorithm,
                     choice=plan.get(f"{name}.proj"))
+    bch = plan.get(f"{name}.block")
     if bottleneck:
         h = _conv(p["c1"], x, 1, algorithm, choice=plan.get(f"{name}.c1"),
                   act="relu")
         h = _conv(p["c2"], h, stride, algorithm,
                   choice=plan.get(f"{name}.c2"), act="relu",
                   u=wu.get(f"{name}.c2"))
+        if bch is not None:
+            return algorithms.block_residual_conv(h, p["c3"], bch, res=idn)
         h = _conv(p["c3"], h, 1, algorithm, choice=plan.get(f"{name}.c3"))
     else:
         h = _conv(p["c1"], x, stride, algorithm,
                   choice=plan.get(f"{name}.c1"), act="relu",
                   u=wu.get(f"{name}.c1"))
+        if bch is not None:
+            return algorithms.block_residual_conv(h, p["c2"], bch, res=idn)
         h = _conv(p["c2"], h, 1, algorithm, choice=plan.get(f"{name}.c2"),
                   u=wu.get(f"{name}.c2"))
     return jax.nn.relu(h + idn)

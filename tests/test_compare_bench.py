@@ -74,6 +74,75 @@ def test_new_and_removed_layers_are_skipped_not_failed():
     # separate xla_sites assert still rejects it outright)
 
 
+def _blocks_payload(fused=(True, True), est=(4e5, 6e5), per_layer=(7e5, 9e5)):
+    p = _payload()
+    p["blocks"] = [
+        {"block": name, "kind": "inverted_residual", "fused": f,
+         "algorithm": "fused_inverted_residual" if f else None,
+         "est_bytes": int(e) if f else None,
+         "per_layer_est_bytes": int(pl)}
+        for name, f, e, pl in zip(("s0b0", "s1b0"), fused, est, per_layer)
+    ]
+    return p
+
+
+def test_fused_block_clean_comparison_passes():
+    base = _blocks_payload()
+    problems, _ = compare_bench.compare(base, copy.deepcopy(base))
+    assert problems == []
+
+
+def test_previously_fused_block_regressing_to_per_layer_fails():
+    base = _blocks_payload()
+    cand = _blocks_payload(fused=(True, False))
+    problems, _ = compare_bench.compare(base, cand)
+    assert any("previously-fused block site regressed" in p
+               for p in problems)
+
+
+def test_newly_fused_block_is_noted_not_failed():
+    base = _blocks_payload(fused=(True, False))
+    cand = _blocks_payload()
+    problems, notes = compare_bench.compare(base, cand)
+    assert problems == []
+    assert any("newly fused" in n for n in notes)
+
+
+def test_fused_row_must_save_bytes():
+    """The charging invariant, gated in CI: a fused row whose byte
+    estimate is not strictly below the per-layer constituent sum means
+    the cost model's saved-round-trip accounting broke."""
+    base = _blocks_payload()
+    cand = _blocks_payload(est=(4e5, 9e5))  # == per_layer sum: no saving
+    problems, _ = compare_bench.compare(base, cand)
+    assert any("not" in p and "per-layer" in p for p in problems)
+
+
+def test_pre_fusion_baseline_without_blocks_section_is_tolerated():
+    base = _payload()  # v1 artifact: no "blocks" key at all
+    cand = _blocks_payload()
+    problems, _ = compare_bench.compare(base, cand)
+    assert problems == []
+
+
+def test_conv_committed_baseline_block_invariants():
+    """The committed conv baseline carries fused-block rows, at least one
+    site is fused, and every fused row's estimate is strictly below its
+    per-layer sum — the acceptance bar, pinned on the artifact CI diffs
+    against."""
+    baseline = REPO / "benchmarks" / "baseline" / "BENCH_conv.json"
+    d = json.loads(baseline.read_text())
+    blocks = d.get("blocks", [])
+    assert blocks, "baseline predates fused-block rows"
+    fused = [b for b in blocks if b["fused"]]
+    assert fused
+    for b in fused:
+        assert b["est_bytes"] < b["per_layer_est_bytes"], b["block"]
+    assert d["fused_sites"] == [b["block"] for b in fused]
+    problems, _ = compare_bench.compare(d, copy.deepcopy(d))
+    assert problems == []
+
+
 def _stream_payload(steady_miss=0.0, overload_miss=0.8, drop_rate=0.3):
     def scenario(miss, drops):
         return {"sim_compute_ms": 8.0,

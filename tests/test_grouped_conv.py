@@ -141,8 +141,10 @@ def test_tuner_on_grouped_specs():
 
 def test_mobilenet_tuned_plan_end_to_end(monkeypatch):
     """The acceptance path: a MobileNet-style forward runs through a tuned
-    per-layer plan (cost-model mode) with every depthwise/pointwise site
-    dispatched via ops.dispatch, and matches the all-XLA reference."""
+    plan (cost-model mode) where fused inverted-residual blocks dispatch
+    ONE megakernel each (per-layer would have dispatched two or three),
+    every unfused depthwise/pointwise site goes through ops.dispatch, and
+    the result matches the all-XLA reference."""
     cfg = tiny_variant(get("mobilenet_v2"))
     calls = _spy_algorithms(monkeypatch)  # records (algorithm, params)
     eng = InferenceEngine(cfg)  # algorithm="auto": builds a plan
@@ -151,20 +153,37 @@ def test_mobilenet_tuned_plan_end_to_end(monkeypatch):
     pw_sites = [n for n, s in plan.specs.items()
                 if s.groups == 1 and s.r == 1]
     assert dw_sites and pw_sites
+    # per-conv entries are always planned, even for blocks that fuse —
+    # the plan stays deployable on engines without block support
     assert all(plan.choices[n].algorithm == "depthwise" for n in dw_sites)
     assert all(plan.choices[n].algorithm == "pointwise" for n in pw_sites)
     # the strided dense stem runs a strided Pallas kernel, not xla
     assert plan.choices["stem"].algorithm in ("ilpm", "direct")
     # strided depthwise sites are planned, not punted to xla
     assert any(plan.specs[n].stride == 2 for n in dw_sites)
+    # the tuner fuses at least one inverted-residual block (acceptance
+    # criterion: the expanded tensor never round-trips through HBM there)
+    assert plan.block_choices
+    assert all(c.algorithm == "fused_inverted_residual"
+               for c in plan.block_choices.values())
 
     img = jax.random.normal(KEY, (32, 32, 3))
     logits = eng.run(img)
     assert logits.shape == (cfg.vocab_size,)
     assert not bool(jnp.isnan(logits).any())
     dispatched = [name for name, _ in calls]
-    assert dispatched.count("depthwise") == len(dw_sites)
-    assert dispatched.count("pointwise") == len(pw_sites)
+    # each fused block produces exactly ONE dispatch...
+    assert (dispatched.count("fused_inverted_residual")
+            == len(plan.block_choices))
+    # ...and its constituent convs are not dispatched separately; unfused
+    # dw/pw sites (and the head projection) still run their tuned kernels
+    fused_convs = {f"{b[:-len('.block')]}.{sfx}"
+                   for b in plan.block_choices
+                   for sfx, _ in plan.block_specs[b].conv_specs()}
+    assert dispatched.count("depthwise") == len(
+        [n for n in dw_sites if n not in fused_convs])
+    assert dispatched.count("pointwise") == len(
+        [n for n in pw_sites if n not in fused_convs])
 
     ref_eng = InferenceEngine(cfg, params=eng.params, algorithm="xla")
     np.testing.assert_allclose(np.asarray(logits),

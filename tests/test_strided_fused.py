@@ -196,6 +196,11 @@ def test_tuned_resnet_plan_has_no_xla_dense_sites(net):
     # strided + 1x1 sites resolve to real kernel families
     assert algos["stem"] in ("ilpm", "direct")
     assert algos["s1b0.proj"] == "pointwise"
+    # block sites resolve to the fused family too — no block ever
+    # regresses to an escape hatch (select_block returns None, never xla)
+    assert eng.plan.block_choices
+    assert all(c.algorithm == "fused_residual_conv"
+               for c in eng.plan.block_choices.values())
     img = jax.random.normal(KEY, (32, 32, 3))
     out = eng.run(img)
     want = InferenceEngine(cfg, params=eng.params, algorithm="xla").run(img)

@@ -76,14 +76,25 @@ def test_engine_auto_plan_drives_dispatch(monkeypatch, tmp_path):
     tuned = {n: c for n, c in plan.choices.items() if c.algorithm != "xla"}
     assert len(tuned) >= 2
     assert len({c.params for c in tuned.values()}) >= 2
+    # the tuner fuses the residual add into each block's final conv
+    assert plan.block_choices
+    assert all(c.algorithm == "fused_residual_conv"
+               for c in plan.block_choices.values())
 
     calls = _spy_algorithms(monkeypatch)
     img = jax.random.normal(KEY, (32, 32, 3))
     logits = eng.run(img)
 
     # the dispatched kernels match the plan exactly: one call per planned
-    # non-xla site, with that site's tuned params
-    expected = sorted((c.algorithm, c.params) for c in tuned.values())
+    # non-xla site with that site's tuned params, except that each fused
+    # block replaces its final per-conv dispatch with ONE block dispatch
+    fused_convs = {f"{b[:-len('.block')]}.{sfx}"
+                   for b in plan.block_choices
+                   for sfx, _ in plan.block_specs[b].conv_specs()}
+    expected = sorted(
+        [(c.algorithm, c.params) for n, c in tuned.items()
+         if n not in fused_convs]
+        + [(c.algorithm, c.params) for c in plan.block_choices.values()])
     assert sorted(calls) == expected
 
     # tune-once / deploy-many: JSON round-trip, same dispatch, same logits
@@ -91,6 +102,8 @@ def test_engine_auto_plan_drives_dispatch(monkeypatch, tmp_path):
     eng.save_plan(path)
     loaded = TuningPlan.load(path)
     assert loaded.choices == plan.choices
+    assert loaded.block_choices == plan.block_choices
+    assert loaded.block_specs == plan.block_specs
 
     calls.clear()
     eng2 = InferenceEngine(cfg, params=eng.params, plan=str(path))

@@ -92,6 +92,30 @@ def compare(baseline: dict, candidate: dict, *, proxy_tolerance: float = 0.25,
             f"{c_est / b_est - 1:+.1%} (> {est_tolerance:.0%} allowed): "
             f"{b_est:.3e}s -> {c_est:.3e}s")
 
+    # --- fused-coverage gate (v2 artifacts carry ``blocks`` rows) ------
+    # A block site the baseline ran FUSED must stay fused: regressing to
+    # the per-layer path silently reintroduces the HBM round-trips the
+    # megakernel deleted. New fusions are notes; artifacts without a
+    # blocks section (pre-fusion baselines) skip the check entirely.
+    b_blocks = {b["block"]: b for b in baseline.get("blocks", [])}
+    c_blocks = {b["block"]: b for b in candidate.get("blocks", [])}
+    for name in sorted(b_blocks.keys() & c_blocks.keys()):
+        was, now = b_blocks[name].get("fused"), c_blocks[name].get("fused")
+        if was and not now:
+            problems.append(
+                f"{name}: previously-fused block site regressed to the "
+                f"per-layer path")
+        elif now and not was:
+            notes.append(f"{name}: block site newly fused")
+    for name, cb in sorted(c_blocks.items()):
+        # the charging invariant: a fused row must actually save traffic
+        if cb.get("fused") and cb.get("est_bytes") is not None \
+                and cb["est_bytes"] >= cb.get("per_layer_est_bytes",
+                                              float("inf")):
+            problems.append(
+                f"{name}: fused byte estimate {cb['est_bytes']} is not "
+                f"below the per-layer sum {cb['per_layer_est_bytes']}")
+
     timed = [n for n in common
              if base[n].get("interpret_time_s") is not None
              and cand[n].get("interpret_time_s") is not None]
