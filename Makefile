@@ -37,11 +37,26 @@ bench-json:
 bench-compare:
 	$(PYTHON) tools/compare_bench.py benchmarks/baseline/BENCH_conv.json BENCH_conv.json
 
-# Micro-batched serving throughput/latency (>= 2 networks, one shared
-# EngineCache process) -> BENCH_serving.json.
+# Micro-batched serving scenarios (>= 2 networks, one shared EngineCache
+# process): steady throughput/latency + the overload scenario (bounded
+# queue at ~2x+ capacity, typed shedding) -> BENCH_serving.json.
 .PHONY: bench-serving
 bench-serving:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/run.py --serve BENCH_serving.json
+
+# Gate the fresh BENCH_serving.json against the committed baseline: fails
+# if the overload scenario stops shedding (unbounded queue again), any
+# accepted Future never resolved, accepted p95 exceeds the queue-depth
+# bound, or shed_rate drifts outside the band.
+.PHONY: bench-compare-serving
+bench-compare-serving:
+	$(PYTHON) tools/compare_bench.py benchmarks/baseline/BENCH_serving.json BENCH_serving.json
+
+# The chaos suite alone: scripted FaultInjector runs over retry/breaker/
+# degrade/shed paths plus the fault-tolerance runtime tests.
+.PHONY: chaos
+chaos:
+	PYTHONPATH=src $(PYTHON) -m pytest -q tests/test_chaos.py tests/test_fault_tolerance.py
 
 # Multi-stream deadline bench: K simulated-clock 30 fps streams (engine
 # leases) + on-demand classify contention -> BENCH_streaming.json.

@@ -162,16 +162,13 @@ def emit_json(path, config="resnet18"):
           f"{len(payload['fused_sites'])}/{len(blocks)} block sites fused")
 
 
-def emit_serving_json(path, networks=("resnet18", "mobilenet_v2"),
-                      requests_per_net=12, max_batch=4, window_ms=20.0):
-    """Serve ``requests_per_net`` single-image requests per network through
-    one micro-batching Server (shared EngineCache) and dump per-network
-    throughput/latency + cache stats to ``path`` (BENCH_serving.json)."""
+def _serving_steady(networks, requests_per_net, max_batch, window_ms):
+    """The throughput leg: interleaved single-image requests over >= 2
+    networks through one shared-cache Server; every request must resolve."""
     import jax
 
     from repro.serving import Server
 
-    assert len(networks) >= 2, "serving bench covers >= 2 networks"
     server = Server(tiny=True, max_batch=max_batch, window_ms=window_ms)
     key = jax.random.key(0)
     img = jax.random.normal(key, (32, 32, 3))
@@ -188,22 +185,133 @@ def emit_serving_json(path, networks=("resnet18", "mobilenet_v2"),
     wall = time.perf_counter() - t0
     stats = server.stats()
     server.close()
-    payload = {
-        "networks": list(networks),
+    return {
+        "requests": len(futures),
         "requests_per_net": requests_per_net,
-        "max_batch": max_batch,
-        "window_ms": window_ms,
         "wall_s": wall,
         "throughput_rps": len(futures) / wall,
         "per_network": stats["networks"],
         "cache": stats["cache"],
     }
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def _serving_overload(network, *, offered=80, max_queue=4,
+                      service_delay_s=0.04, submit_interval_s=0.005):
+    """The overload leg: offer ~2x+ the server's capacity and prove the
+    admission controller sheds the excess instead of queueing it.
+
+    A ``FaultInjector`` latency fault pins the per-dispatch service time
+    to a known floor (``service_delay_s``), so the offered load exceeds
+    capacity regardless of machine speed; submissions arrive every
+    ``submit_interval_s`` — well past capacity — against a ``max_queue``
+    admission bound. The gate (tools/compare_bench.py, serving kind)
+    holds: shed_rate within a band of the baseline AND nonzero, every
+    accepted Future resolved (``unresolved == 0``), and accepted-request
+    p95 latency under ``p95_bound_s`` — bounded queueing is the point:
+    admission control converts unbounded latency into typed rejections.
+
+    ``p95_bound_s`` is derived on the spot from the machine's measured
+    warm service time: an admitted request waits for at most ``max_queue``
+    requests ahead of it, so p95 must sit under ``(max_queue + 3) *
+    service_s`` (one slot of in-flight slack, two of timer slop). The
+    bound travels in the artifact, making the gate self-contained and
+    machine-portable — what it pins is the *queue-depth invariant*, not an
+    absolute wall-clock number.
+    """
+    import jax
+
+    from repro.serving import FaultInjector, Overloaded, Server
+
+    faults = FaultInjector().delay_from("dispatch", 0,
+                                        seconds=service_delay_s)
+    server = Server(tiny=True, max_batch=1, window_ms=0.5,
+                    max_queue=max_queue, faults=faults)
+    key = jax.random.key(1)
+    img = jax.random.normal(key, (32, 32, 3))
+    server.warm(network)  # build outside the overloaded window
+    # measure the warm per-request service time (injected floor + engine
+    # compute on THIS machine); min of a few trials rejects scheduler noise
+    service_s = min(
+        _timed(lambda: server.run(network, img)) for _ in range(3))
+    p95_bound_s = (max_queue + 3) * service_s
+    futures, shed = [], 0
+    t0 = time.perf_counter()
+    for i in range(offered):
+        try:
+            futures.append(server.submit(network, img))
+        except Overloaded:
+            shed += 1
+        time.sleep(submit_interval_s)
+    unresolved = 0
+    for f in futures:
+        try:
+            f.result(timeout=600)
+        except Exception:
+            unresolved += 1  # an accepted request MUST resolve
+    wall = time.perf_counter() - t0
+    per_net = server.stats()["networks"]
+    server.close()
+    accepted = len(futures)
+    b = next(iter(per_net.values()))  # single-network scenario
+    return {
+        "offered": offered,
+        "accepted": accepted,
+        "shed": shed,
+        "shed_rate": shed / offered,
+        "unresolved": unresolved,
+        "max_queue": max_queue,
+        "service_delay_s": service_delay_s,
+        "measured_service_s": service_s,
+        "submit_interval_s": submit_interval_s,
+        "wall_s": wall,
+        "accepted_p50_s": b["latency_p50_s"],
+        "accepted_p95_s": b["latency_p95_s"],
+        "p95_bound_s": p95_bound_s,
+        "shed_by_cause": b["shed"],
+        "retries": b["retries"],
+        "breaker": b["breaker"],
+    }
+
+
+def emit_serving_json(path, networks=("resnet18", "mobilenet_v2"),
+                      requests_per_net=12, max_batch=4, window_ms=20.0):
+    """Run the serving scenarios and dump BENCH_serving.json.
+
+    Two scenarios: **steady** — interleaved single-image requests per
+    network through one micro-batching Server (shared EngineCache),
+    per-network throughput/latency + cache stats; **overload** — ~2x+
+    capacity offered against a bounded queue, proving admission control
+    sheds with typed ``Overloaded`` while accepted requests keep bounded
+    latency. The CI gate (tools/compare_bench.py) holds the overload
+    invariants against the committed baseline.
+    """
+    assert len(networks) >= 2, "serving bench covers >= 2 networks"
+    steady = _serving_steady(networks, requests_per_net, max_batch,
+                             window_ms)
+    overload = _serving_overload(networks[0])
+    payload = {
+        "kind": "serving",
+        "networks": list(networks),
+        "max_batch": max_batch,
+        "window_ms": window_ms,
+        "scenarios": {"steady": steady, "overload": overload},
+    }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
-    print(f"wrote {path}: {len(futures)} requests over {len(networks)} "
-          f"networks in {wall:.2f}s ({payload['throughput_rps']:.1f} req/s), "
-          f"cache {payload['cache']['misses']} builds / "
-          f"{payload['cache']['hits']} hits")
+    print(f"wrote {path}: steady {steady['requests']} requests over "
+          f"{len(networks)} networks in {steady['wall_s']:.2f}s "
+          f"({steady['throughput_rps']:.1f} req/s, cache "
+          f"{steady['cache']['misses']} builds / {steady['cache']['hits']} "
+          f"hits); overload shed {overload['shed']}/{overload['offered']} "
+          f"(rate {overload['shed_rate']:.2f}), accepted p95 "
+          f"{overload['accepted_p95_s']:.3f}s <= {overload['p95_bound_s']}s "
+          f"bound, {overload['unresolved']} unresolved")
 
 
 def emit_streaming_json(path, *, networks=("resnet18", "mobilenet_v2"),

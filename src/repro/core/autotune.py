@@ -536,6 +536,25 @@ class TuningPlan:
             return cls.from_json(f.read())
 
 
+def xla_fallback_plan(named_specs, mode: str = "cost_model") -> TuningPlan:
+    """Every site on the ``xla`` escape hatch — the **degraded-mode**
+    plan the serving layer deploys when tuned Pallas dispatch (or a
+    block-plan deploy) fails persistently.
+
+    Each enumerated site gets ``xla_choice`` (costed as the fused
+    conv+BN+act variant, matching how engines tune), and no block sites
+    are fused — the forward routes every conv through the lax reference
+    path, trading the paper's tuned kernels for staying up. Geometry and
+    dtype come from the same ``named_specs`` enumeration a tuned plan
+    uses, so engine plan-validation accepts the fallback unchanged.
+    """
+    plan = TuningPlan(mode=mode)
+    for name, spec in named_specs:
+        plan.specs[name] = spec
+        plan.choices[name] = xla_choice(spec, epilogue=True)
+    return plan
+
+
 def build_plan(named_specs, mode: str = "cost_model", *, repeats=3,
                noise_floor=0.5, epilogue=False,
                block_specs=None) -> TuningPlan:

@@ -51,7 +51,10 @@ class StragglerWatch:
 
 
 class TransientFailure(Exception):
-    """Raised by hardware/injection to exercise the restart path."""
+    """The repo-wide transient-error type: raised by hardware/injection
+    to exercise the restart path here, and re-exported by
+    ``repro.serving.resilience`` as the retryable class for serving-side
+    dispatch/build faults (anything else is treated as persistent)."""
 
 
 def resilient_train(*, state, train_step, pipeline, ckpt, total_steps,

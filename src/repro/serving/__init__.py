@@ -7,8 +7,16 @@ single-image fast path); ``EngineCache`` LRU-caches built engines keyed by
 (network, input_size, device, dtype) and reuses tuned plans across
 variants; ``StreamSession`` (``Server.open_stream``) serves fixed-rate
 frame streams over per-stream engine leases with double-buffered frames,
-a skip-to-latest drop policy, and per-frame deadline accounting. See
-docs/serving.md for the request and session lifecycles.
+a skip-to-latest drop policy, and per-frame deadline accounting.
+
+The resilience layer makes the loop overload-safe: bounded admission
+(``Overloaded``), deadline shedding at dequeue (``DeadlineExceeded``),
+``RetryPolicy`` backoff for transient dispatch failures, a per-engine
+``CircuitBreaker`` that degrades persistent failures to the xla-only
+fallback plan, and a deterministic ``FaultInjector`` harness threaded
+through batchers, the engine cache, and stream sessions. See
+docs/serving.md for the request and session lifecycles and the
+"Overload & failure semantics" section.
 """
 from repro.serving.batcher import MicroBatcher, bucket  # noqa: F401
 from repro.serving.engine_cache import (  # noqa: F401
@@ -16,8 +24,19 @@ from repro.serving.engine_cache import (  # noqa: F401
     EngineLease,
     engine_key,
     plan_key,
+    xla_fallback_plan,
 )
+from repro.serving.faults import Fault, FaultInjector  # noqa: F401
 from repro.serving.request import Request  # noqa: F401
+from repro.serving.resilience import (  # noqa: F401
+    CircuitBreaker,
+    CircuitOpen,
+    DeadlineExceeded,
+    Overloaded,
+    Rejected,
+    RetryPolicy,
+    TransientFailure,
+)
 from repro.serving.server import Server  # noqa: F401
 from repro.serving.streaming import (  # noqa: F401
     Frame,

@@ -1,5 +1,5 @@
 """Micro-batcher: coalesce concurrent single-image requests into one
-padded-batch dispatch within a deadline window.
+padded-batch dispatch within a deadline window — and survive overload.
 
 The paper's premise is batch-1 requests arriving one at a time; under
 concurrent traffic the device still prefers one dispatch over N. The
@@ -16,11 +16,34 @@ coalescing whatever else arrives (up to ``max_batch``), then dispatches:
 ``run_batch`` maps the *single-image* computation over the batch inside
 one jitted call (``lax.map``), so outputs are bitwise-equal to sequential
 ``engine.run`` calls — micro-batching changes scheduling, never numerics.
+
+Overload and failure handling (see docs/serving.md "Overload & failure
+semantics"):
+
+  * **admission control** — ``max_queue`` bounds the queue; a submit
+    beyond it is rejected *immediately* with ``Overloaded`` (typed, cheap,
+    before any work). A closed batcher rejects the same way.
+  * **deadline shedding** — with ``deadline_ms`` set, a request still
+    queued past its deadline (or cancelled by its client) is shed **at
+    dequeue** with ``DeadlineExceeded``: an expired request never burns a
+    dispatch, which is what keeps an overloaded queue from doing work
+    nobody is waiting for.
+  * **retry + breaker** — a dispatch raising ``TransientFailure`` (the
+    repo-wide transient-error type) is retried with capped exponential
+    backoff (``retry``); *every* dispatch failure feeds the per-engine
+    ``CircuitBreaker``, which trips open after N consecutive failures so
+    a sick engine sheds fast (``CircuitOpen``) instead of queueing.
+  * **degraded mode** — when the breaker trips and a ``degrade`` hook was
+    provided (the server wires ``EngineCache.degrade``), the batcher swaps
+    its engine for the xla-only fallback, resets the breaker, and retries
+    the in-flight batch there — serving continues at reduced speed rather
+    than going dark.
 """
 from __future__ import annotations
 
 import queue
 import threading
+import time
 from concurrent.futures import Future
 
 import jax
@@ -28,6 +51,14 @@ import jax.numpy as jnp
 
 from repro.serving import request as req_mod
 from repro.serving.request import Request
+from repro.serving.resilience import (
+    CircuitBreaker,
+    CircuitOpen,
+    DeadlineExceeded,
+    Overloaded,
+    RetryPolicy,
+    TransientFailure,
+)
 
 _STOP = object()
 
@@ -51,7 +82,11 @@ class MicroBatcher:
     """
 
     def __init__(self, engine, *, max_batch: int = 8, window_ms: float = 2.0,
-                 pad_batches: bool = True, deadline_ms: float | None = None):
+                 pad_batches: bool = True, deadline_ms: float | None = None,
+                 max_queue: int | None = None,
+                 retry: RetryPolicy | None = None,
+                 breaker: CircuitBreaker | None = None,
+                 degrade=None, faults=None):
         assert max_batch >= 1
         self.engine = engine
         # power-of-two invariant: bucket() pads to powers of two, so a
@@ -60,17 +95,33 @@ class MicroBatcher:
         # the traced-shape set stays exactly {1, 2, 4, ..., max_batch}
         self.max_batch = 1 << (max_batch.bit_length() - 1)
         self.window_s = window_ms / 1e3
-        # per-request latency SLO (submit -> resolution); None = no SLO.
-        # stats() reports misses against it — the same deadline telemetry
-        # streaming sessions expose, for on-demand traffic.
+        # per-request latency SLO (submit -> resolution). Besides the
+        # miss telemetry, it is the shed deadline: a request still queued
+        # past arrival + deadline is failed at dequeue, before compute.
         self.deadline_s = None if deadline_ms is None else deadline_ms / 1e3
+        # admission bound: queued (admitted, not yet dequeued) requests
+        # beyond this are rejected with Overloaded. None = unbounded.
+        self.max_queue = max_queue
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.breaker = breaker if breaker is not None else CircuitBreaker()
+        self._degrade = degrade      # () -> replacement engine, or None
+        self._faults = faults        # FaultInjector, or None
         self.pad_batches = pad_batches
         self.dispatches: list[dict] = []  # {batch, padded, latencies}
         # the loop thread appends to the dispatch log while stats() reads
         # it from caller threads: every access goes through this lock
         self._stats_lock = threading.Lock()
         self._causes = {"full": 0, "window": 0, "drain": 0}
+        self._shed = {"overload": 0, "deadline": 0, "cancelled": 0,
+                      "breaker": 0}
+        self._retries = 0
+        self.degraded = 0            # engine swaps to the xla fallback
         self._queue: queue.Queue = queue.Queue()
+        # _admit_lock makes (closed-check + depth-check + enqueue) atomic
+        # against close() and against racing submitters, so the admission
+        # bound is exact and nothing enqueues behind the stop sentinel
+        self._admit_lock = threading.Lock()
+        self._depth = 0
         self._closed = False
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name=f"microbatcher-{id(self):x}")
@@ -80,19 +131,38 @@ class MicroBatcher:
 
     def submit(self, image) -> Future:
         """Enqueue one (H, W, C) image; the Future resolves to (classes,)
-        logits."""
-        if self._closed:
-            raise RuntimeError("batcher is closed")
+        logits. Raises ``Overloaded`` if the batcher is closed or the
+        bounded queue is full (admission control — shed before work)."""
+        return self.submit_request(image).future
+
+    def submit_request(self, image) -> Request:
+        """Like ``submit`` but returns the ``Request`` record, so callers
+        (``Server.run``) can ``cancel()`` it on their own timeout."""
         req = Request(image)
-        self._queue.put(req)
-        return req.future
+        if self.deadline_s is not None:
+            req.deadline = req.arrival + self.deadline_s
+        with self._admit_lock:
+            if self._closed:
+                raise Overloaded("batcher is closed")
+            if self.max_queue is not None and self._depth >= self.max_queue:
+                with self._stats_lock:
+                    self._shed["overload"] += 1
+                raise Overloaded(
+                    f"queue full ({self._depth}/{self.max_queue} waiting); "
+                    f"request shed at admission")
+            self._depth += 1
+            self._queue.put(req)
+        return req
 
     def close(self, timeout: float | None = 30.0) -> None:
-        """Drain the queue, dispatch what's pending, stop the thread."""
-        if self._closed:
-            return
-        self._closed = True
-        self._queue.put(_STOP)
+        """Drain the queue, dispatch what's pending, stop the thread.
+        Idempotent; racing submits either land before the stop sentinel
+        (and drain) or are rejected with ``Overloaded``."""
+        with self._admit_lock:
+            if self._closed:
+                return
+            self._closed = True
+            self._queue.put(_STOP)
         self._thread.join(timeout)
 
     def __enter__(self):
@@ -103,14 +173,36 @@ class MicroBatcher:
 
     # ------------------------------------------------------------------
 
-    def _loop(self) -> None:
-        import time
+    def _take(self, req: Request) -> bool:
+        """Dequeue-side bookkeeping + shedding: returns True if ``req``
+        should join the batch, False if it was shed (expired/cancelled)
+        before any compute was spent on it."""
+        with self._admit_lock:
+            self._depth -= 1
+        now = time.perf_counter()
+        if req.cancelled:
+            with self._stats_lock:
+                self._shed["cancelled"] += 1
+            req_mod.fail(req, DeadlineExceeded(
+                f"request {req.id} cancelled by its client; shed at dequeue"))
+            return False
+        if req.expired(now):
+            with self._stats_lock:
+                self._shed["deadline"] += 1
+            req_mod.fail(req, DeadlineExceeded(
+                f"request {req.id} missed its {self.deadline_s * 1e3:g}ms "
+                f"deadline while queued; shed at dequeue"))
+            return False
+        return True
 
+    def _loop(self) -> None:
         stopping = False
         while not stopping:
             req = self._queue.get()  # block until traffic (or shutdown)
             if req is _STOP:
                 break
+            if not self._take(req):
+                continue  # shed at dequeue: never starts a batch
             batch = [req]
             deadline = time.perf_counter() + self.window_s
             while len(batch) < self.max_batch:
@@ -124,7 +216,8 @@ class MicroBatcher:
                 if nxt is _STOP:
                     stopping = True
                     break
-                batch.append(nxt)
+                if self._take(nxt):
+                    batch.append(nxt)
             cause = ("drain" if stopping
                      else "full" if len(batch) >= self.max_batch
                      else "window")
@@ -133,30 +226,96 @@ class MicroBatcher:
             self._dispatch(batch)
         # a submit racing close() can enqueue behind the _STOP sentinel;
         # fail those requests instead of leaving their futures unresolved
+        # (same typed rejection as admission-control shedding)
         while True:
             try:
                 req = self._queue.get_nowait()
             except queue.Empty:
                 return
             if req is not _STOP:
-                req_mod.fail(req, RuntimeError("batcher closed"))
+                with self._admit_lock:
+                    self._depth -= 1
+                req_mod.fail(req, Overloaded("batcher closed"))
+
+    # ------------------------------------------------------------------
+    # dispatch with retry / breaker / degraded-mode fallback
+
+    def _run(self, batch: list[Request]):
+        if len(batch) == 1:
+            # the paper's single-image fast path: tuned per-layer
+            # dispatch on exactly one image, no stacking, no padding
+            outs = [self.engine.run(batch[0].image)]
+            padded = 1
+        else:
+            n = len(batch)
+            padded = bucket(n, self.max_batch) if self.pad_batches else n
+            images = [r.image for r in batch]
+            images += [images[-1]] * (padded - n)  # filler rows
+            logits = self.engine.run_batch(jnp.stack(images))
+            outs = [logits[i] for i in range(n)]
+        # settle async dispatch before resolving: futures hand back
+        # finished results, and latency stamps include the compute
+        return jax.block_until_ready(outs), padded
+
+    def _try_degrade(self) -> bool:
+        """Swap in the degraded (xla-only) engine via the owner's hook.
+        One swap per batcher: if the fallback is *also* failing, the
+        breaker stays open and sheds instead of thrashing rebuilds."""
+        if self._degrade is None or self.degraded:
+            return False
+        try:
+            engine = self._degrade()
+        except Exception:
+            return False  # degrade itself failed: stay open, shed fast
+        self.engine = engine
+        with self._stats_lock:
+            self.degraded += 1
+        self.breaker.reset()
+        return True
+
+    def _attempt(self, batch: list[Request]):
+        """Run ``batch`` to completion under the resilience policy:
+        transient failures retry with backoff, every failure feeds the
+        breaker, a trip attempts the degraded-mode engine swap, and an
+        open breaker sheds with ``CircuitOpen``."""
+        attempt = 0
+        while True:
+            if not self.breaker.allow():
+                if self._try_degrade():
+                    continue
+                with self._stats_lock:
+                    self._shed["breaker"] += len(batch)
+                raise CircuitOpen(
+                    f"engine circuit breaker is {self.breaker.state} "
+                    f"after {self.breaker.threshold} consecutive failures; "
+                    f"shedding until it recovers")
+            try:
+                # injected dispatch faults model a sick tuned kernel, so
+                # a degraded (xla-only) engine no longer contains them
+                if self._faults is not None and not self.degraded:
+                    delay = self._faults.check("dispatch")
+                    if delay:
+                        time.sleep(delay)
+                outs, padded = self._run(batch)
+            except Exception as e:
+                tripped = self.breaker.record_failure()
+                if tripped and self._try_degrade():
+                    continue  # serve this very batch from the fallback
+                if isinstance(e, TransientFailure) \
+                        and attempt < self.retry.max_retries \
+                        and self.breaker.allow():
+                    with self._stats_lock:
+                        self._retries += 1
+                    time.sleep(self.retry.delay(attempt))
+                    attempt += 1
+                    continue
+                raise
+            self.breaker.record_success()
+            return outs, padded
 
     def _dispatch(self, batch: list[Request]) -> None:
         try:
-            if len(batch) == 1:
-                # the paper's single-image fast path: tuned per-layer
-                # dispatch on exactly one image, no stacking, no padding
-                outs = [self.engine.run(batch[0].image)]
-            else:
-                n = len(batch)
-                padded = bucket(n, self.max_batch) if self.pad_batches else n
-                images = [r.image for r in batch]
-                images += [images[-1]] * (padded - n)  # filler rows
-                logits = self.engine.run_batch(jnp.stack(images))
-                outs = [logits[i] for i in range(n)]
-            # settle async dispatch before resolving: futures hand back
-            # finished results, and latency stamps include the compute
-            outs = jax.block_until_ready(outs)
+            outs, padded = self._attempt(batch)
         except Exception as e:  # resolve, don't kill the loop
             for r in batch:
                 req_mod.fail(r, e)
@@ -166,7 +325,7 @@ class MicroBatcher:
         with self._stats_lock:
             self.dispatches.append({
                 "batch": len(batch),
-                "padded": len(batch) if len(batch) == 1 else padded,
+                "padded": padded,
                 "latencies": [r.latency for r in batch],
             })
 
@@ -176,10 +335,15 @@ class MicroBatcher:
         """Dispatch-log aggregates: request count, batch-size histogram,
         latency mean/p50/p95/max (seconds, submit -> future resolution),
         live queue depth, dispatch causes (full batch vs expired window
-        vs shutdown drain), and deadline misses if an SLO is set."""
+        vs shutdown drain), deadline misses if an SLO is set, and the
+        resilience counters (sheds by cause, retries, breaker state,
+        degraded-mode swaps)."""
         with self._stats_lock:  # snapshot: the loop thread appends live
             dispatches = list(self.dispatches)
             causes = dict(self._causes)
+            shed = dict(self._shed)
+            retries = self._retries
+            degraded = self.degraded
         lats = sorted(l for d in dispatches for l in d["latencies"])
 
         def pct(q):
@@ -196,9 +360,15 @@ class MicroBatcher:
             "requests": len(lats),
             "dispatches": len(dispatches),
             "queue_depth": self._queue.qsize(),
+            "max_queue": self.max_queue,
             "window_ms": self.window_s * 1e3,
             "dispatch_causes": causes,
             "batch_histogram": dict(sorted(hist.items())),
+            "shed": shed,
+            "shed_total": sum(shed.values()),
+            "retries": retries,
+            "breaker": self.breaker.stats(),
+            "degraded": degraded,
             "deadline_ms": (None if self.deadline_s is None
                             else self.deadline_s * 1e3),
             "deadline_misses": misses,

@@ -17,6 +17,13 @@ stream. The seed keyed plans by geometry alone, silently deploying fp32
 choices onto reduced-precision engines; ConvSpec's dtype field now makes
 the engine's plan validation reject exactly that, so the key must match.
 
+Builds are fault-tolerant: a transient build failure retries with capped
+backoff, and a build that fails *persistently while deploying a cached
+plan* falls back to the xla-only plan (``xla_fallback_plan``) instead of
+failing every request for the key. ``degrade(cfg)`` is the same fallback
+on demand — the batcher calls it when an engine's circuit breaker trips —
+and ``stats()`` counts both under ``degraded``.
+
 Streaming sessions hold **leases** (``lease``): a leased entry is pinned —
 it does not count against ``capacity`` and LRU eviction skips it — so a
 burst of classify traffic for other networks can never evict the engine
@@ -25,12 +32,27 @@ normal LRU order as most-recently-used.
 """
 from __future__ import annotations
 
+import logging
 import threading
+import time
 from collections import OrderedDict
 
 import jax
 
 from repro.core.engine import InferenceEngine
+from repro.serving.resilience import RetryPolicy, TransientFailure
+
+log = logging.getLogger("repro.serving")
+
+
+def xla_fallback_plan(cfg):
+    """The degraded-mode plan for ``cfg``: every conv site on the xla
+    escape hatch, no fused blocks — same geometry/dtype enumeration as a
+    tuned plan, so engine plan-validation accepts it unchanged."""
+    from repro.core import autotune
+    from repro.models.registry import cnn_module
+
+    return autotune.xla_fallback_plan(cnn_module(cfg).conv_specs(cfg))
 
 
 def engine_key(cfg, device: str | None = None) -> tuple:
@@ -90,10 +112,13 @@ class EngineCache:
     """Thread-safe LRU of InferenceEngines; hit returns the *identical*
     engine object (same jitted forward, same params, same plan)."""
 
-    def __init__(self, capacity: int = 4, tune_mode: str = "cost_model"):
+    def __init__(self, capacity: int = 4, tune_mode: str = "cost_model",
+                 retry: RetryPolicy | None = None, faults=None):
         assert capacity >= 1
         self.capacity = capacity
         self.tune_mode = tune_mode
+        self.retry = retry if retry is not None else RetryPolicy()
+        self._faults = faults  # FaultInjector, or None
         self._engines: OrderedDict[tuple, InferenceEngine] = OrderedDict()
         self._plans: dict[tuple, object] = {}
         self._lock = threading.RLock()
@@ -103,6 +128,9 @@ class EngineCache:
         self.misses = 0
         self.evictions = 0
         self.leases = 0
+        self.degraded = 0  # engines (re)built on the xla fallback plan
+        self.build_retries = 0
+        self._degraded_keys: set[tuple] = set()
 
     def __len__(self) -> int:
         return len(self._engines)
@@ -139,15 +167,81 @@ class EngineCache:
                     return eng
                 pkey = plan_key(cfg)
                 plan = self._plans.get(pkey)
-            eng = InferenceEngine(cfg, params=params, seed=seed, plan=plan,
-                                  tune_mode=self.tune_mode)
+            eng, degraded = self._build(cfg, params=params, seed=seed,
+                                        plan=plan)
             with self._lock:
                 self.misses += 1
-                self._plans.setdefault(pkey, eng.plan)
+                if degraded:
+                    self.degraded += 1
+                    self._degraded_keys.add(key)
+                else:
+                    self._plans.setdefault(pkey, eng.plan)
                 self._engines[key] = eng
                 self._evict_locked()
                 self._build_locks.pop(key, None)
             return eng
+
+    def _build(self, cfg, *, params, seed, plan):
+        """Build one engine with the resilience policy: transient build
+        failures retry with capped backoff; a *persistent* failure while
+        deploying a cached plan (the block-plan-deploy case) falls back
+        to the xla-only plan — degraded, but serving — instead of
+        failing every request for the key. Returns (engine, degraded)."""
+        attempt = 0
+        while True:
+            try:
+                if self._faults is not None:
+                    delay = self._faults.check("build")
+                    if delay:
+                        time.sleep(delay)
+                    if plan is not None:
+                        self._faults.check("plan_deploy")
+                return InferenceEngine(cfg, params=params, seed=seed,
+                                       plan=plan,
+                                       tune_mode=self.tune_mode), False
+            except Exception as e:
+                if isinstance(e, TransientFailure) \
+                        and attempt < self.retry.max_retries:
+                    with self._lock:
+                        self.build_retries += 1
+                    time.sleep(self.retry.delay(attempt))
+                    attempt += 1
+                    continue
+                if plan is not None:
+                    log.warning(
+                        "plan deploy for %s failed persistently (%s); "
+                        "rebuilding on the xla fallback plan", cfg.name, e)
+                    return InferenceEngine(cfg, params=params, seed=seed,
+                                           plan=xla_fallback_plan(cfg)), True
+                raise
+
+    def degrade(self, cfg, *, params=None, seed: int = 0) -> InferenceEngine:
+        """Rebuild ``cfg``'s cache entry on the xla-only fallback plan —
+        the degraded-mode path a batcher takes when its engine's circuit
+        breaker trips on persistent tuned-kernel failures.
+
+        The replacement keeps the old engine's params (same weights, so
+        results differ only by algorithm route), takes over the cache
+        slot (leases on the key keep their original engine object — a
+        live stream is never yanked mid-frame), and bumps the
+        ``degraded`` counter surfaced in ``stats()``.
+        """
+        key = engine_key(cfg)
+        with self._lock:
+            old = self._engines.get(key)
+        if params is None and old is not None:
+            params = old.params
+        eng = InferenceEngine(cfg, params=params, seed=seed,
+                              plan=xla_fallback_plan(cfg))
+        with self._lock:
+            self._engines[key] = eng
+            self._engines.move_to_end(key)
+            self.degraded += 1
+            self._degraded_keys.add(key)
+            self._evict_locked()
+        log.warning("engine for %s degraded to the xla fallback plan",
+                    cfg.name)
+        return eng
 
     def lease(self, cfg, *, params=None, seed: int = 0) -> EngineLease:
         """Pin ``cfg``'s engine for a streaming session (building on miss).
@@ -193,5 +287,9 @@ class EngineCache:
             return {"capacity": self.capacity, "size": len(self._engines),
                     "hits": self.hits, "misses": self.misses,
                     "evictions": self.evictions, "leases": self.leases,
+                    "degraded": self.degraded,
+                    "degraded_keys": sorted(
+                        (list(k) for k in self._degraded_keys), key=str),
+                    "build_retries": self.build_retries,
                     "pinned": [k for k in self._engines if self._pins.get(k)],
                     "keys": list(self._engines)}

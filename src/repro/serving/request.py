@@ -22,18 +22,36 @@ class Request:
     ``future`` resolves to the (classes,) logits (or raises the dispatch
     error). ``arrival`` is set at submit time; ``done`` when the batcher
     resolves the future — their difference is the request's full latency
-    (queue wait + batching window + dispatch)."""
+    (queue wait + batching window + dispatch).
+
+    ``deadline`` is an absolute clock value (``arrival + deadline_s``,
+    stamped at admission when the batcher enforces one): a request still
+    queued past it is **shed at dequeue** — failed with
+    ``DeadlineExceeded`` before any compute is spent. ``cancel()`` marks
+    the request for the same shed path (``Server.run`` calls it when the
+    client's timeout fires, so a timed-out request never burns a
+    dispatch)."""
 
     image: object
     future: Future = field(default_factory=Future)
     arrival: float = field(default_factory=time.perf_counter)
     done: float | None = None
+    deadline: float | None = None
+    cancelled: bool = False
     id: int = field(default_factory=lambda: next(_IDS))
 
     @property
     def latency(self) -> float | None:
         """Seconds from submit to resolution; None while in flight."""
         return None if self.done is None else self.done - self.arrival
+
+    def cancel(self) -> None:
+        """Request shedding at dequeue (client gave up). Best-effort: a
+        request already mid-dispatch still completes."""
+        self.cancelled = True
+
+    def expired(self, now: float) -> bool:
+        return self.deadline is not None and now > self.deadline
 
 
 def resolve(req: Request, value) -> None:

@@ -11,13 +11,25 @@ one cache without head-of-line blocking. This is the seam every future
 scaling layer (sharding, multi-backend, continuous batching) plugs into:
 everything above it speaks (network, image) -> logits, everything below
 it is the tuned-engine world.
+
+The front door is overload-safe (docs/serving.md "Overload & failure
+semantics"): ``max_queue`` bounds every batcher's queue and rejects
+beyond it with ``Overloaded``; ``deadline_ms`` sheds expired requests at
+dequeue (``DeadlineExceeded``) instead of computing them late; transient
+dispatch failures retry with capped backoff; persistent failures trip a
+per-engine circuit breaker, which swaps the engine for an xla-only
+degraded build through ``EngineCache.degrade`` and keeps serving.
+``faults=`` threads one ``FaultInjector`` through the batchers, the
+cache, and every stream session — the deterministic chaos-test hook.
 """
 from __future__ import annotations
 
 import threading
+from concurrent.futures import TimeoutError as FutureTimeoutError
 
 from repro.serving.batcher import MicroBatcher
 from repro.serving.engine_cache import EngineCache, engine_key
+from repro.serving.resilience import CircuitBreaker, Overloaded, RetryPolicy
 from repro.serving.streaming import StreamSession
 
 
@@ -27,18 +39,31 @@ class Server:
     ``networks`` are named configs (``get(name)``) or ArchConfig objects;
     ``tiny=True`` maps names through ``tiny_variant`` (the CPU/CI path).
     ``capacity`` bounds the engine cache; ``max_batch`` / ``window_ms``
-    configure every batcher.
+    configure every batcher. ``max_queue`` (admission bound),
+    ``deadline_ms`` (shed deadline + SLO telemetry), ``retry`` (transient
+    backoff policy), ``breaker_threshold`` / ``breaker_reset_s`` (circuit
+    breaker), and ``faults`` (injection harness) configure the resilience
+    layer; defaults keep the seed behavior (unbounded queue, no deadline,
+    breaker wide at 5 consecutive failures).
     """
 
     def __init__(self, *, cache: EngineCache | None = None, capacity: int = 4,
                  tune_mode: str = "cost_model", max_batch: int = 8,
                  window_ms: float = 2.0, deadline_ms: float | None = None,
-                 tiny: bool = False):
+                 max_queue: int | None = None,
+                 retry: RetryPolicy | None = None,
+                 breaker_threshold: int = 5, breaker_reset_s: float = 30.0,
+                 faults=None, tiny: bool = False):
+        self.faults = faults
         self.engines = cache if cache is not None else EngineCache(
-            capacity=capacity, tune_mode=tune_mode)
+            capacity=capacity, tune_mode=tune_mode, faults=faults)
         self.max_batch = max_batch
         self.window_ms = window_ms
-        self.deadline_ms = deadline_ms  # per-request SLO for on-demand stats
+        self.deadline_ms = deadline_ms  # per-request SLO + shed deadline
+        self.max_queue = max_queue
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.breaker_threshold = breaker_threshold
+        self.breaker_reset_s = breaker_reset_s
         self.tiny = tiny
         self._batchers: dict[tuple, MicroBatcher] = {}
         self._streams: list[StreamSession] = []
@@ -77,9 +102,16 @@ class Server:
         with self._lock:
             b = self._batchers.get(key)
             if b is None:  # we won (or were alone): register our batcher
-                b = MicroBatcher(engine, max_batch=self.max_batch,
-                                 window_ms=self.window_ms,
-                                 deadline_ms=self.deadline_ms)
+                b = MicroBatcher(
+                    engine, max_batch=self.max_batch,
+                    window_ms=self.window_ms, deadline_ms=self.deadline_ms,
+                    max_queue=self.max_queue, retry=self.retry,
+                    breaker=CircuitBreaker(threshold=self.breaker_threshold,
+                                           reset_s=self.breaker_reset_s),
+                    # the degraded-mode hook: a tripped breaker rebuilds
+                    # this key's cache entry on the xla fallback plan
+                    degrade=lambda cfg=cfg: self.engines.degrade(cfg),
+                    faults=self.faults)
                 self._batchers[key] = b
             return b
 
@@ -93,16 +125,36 @@ class Server:
         request from the network's bf16 variant (own engine-cache entry,
         own dtype-keyed tuning plan, images cast in the forward); ``None``
         serves at the config's native precision.
+
+        Raises ``Overloaded`` (a typed rejection) if the server is closed
+        or the target batcher's bounded queue is full.
         """
-        if self._closed:
-            raise RuntimeError("server is closed")
+        return self._submit_request(network, image, dtype=dtype).future
+
+    def _submit_request(self, network, image, *, dtype=None):
+        # the closed check happens under the lock, so a submit racing
+        # close() either lands before the batchers drain (and resolves)
+        # or is rejected here with the same typed error as shedding
+        with self._lock:
+            if self._closed:
+                raise Overloaded("server is closed")
         cfg = self._resolve_cfg(network, dtype)
-        return self._batcher(cfg).submit(image)
+        return self._batcher(cfg).submit_request(image)
 
     def run(self, network, image, timeout: float | None = 120.0, *,
             dtype=None):
-        """Blocking convenience: submit + await one request."""
-        return self.submit(network, image, dtype=dtype).result(timeout)
+        """Blocking convenience: submit + await one request.
+
+        On timeout the request is **cancelled**: if it is still queued,
+        the batcher sheds it at dequeue (``DeadlineExceeded``) instead of
+        burning a dispatch on a result nobody is waiting for.
+        """
+        req = self._submit_request(network, image, dtype=dtype)
+        try:
+            return req.future.result(timeout)
+        except FutureTimeoutError:
+            req.cancel()
+            raise
 
     def warm(self, network, *, dtype=None) -> None:
         """Build ``network``'s engine + batcher ahead of traffic (the
@@ -128,8 +180,9 @@ class Server:
         stream leases the bf16 engine, pinned independently of the fp32
         one.
         """
-        if self._closed:
-            raise RuntimeError("server is closed")
+        with self._lock:
+            if self._closed:
+                raise Overloaded("server is closed")
         cfg = self._resolve_cfg(network, dtype)
         lease = self.engines.lease(cfg)
         with self._lock:
@@ -137,15 +190,20 @@ class Server:
                 name = f"{cfg.name}#{len(self._streams)}"
             session = StreamSession(lease, fps=fps, deadline_ms=deadline_ms,
                                     sim_compute_s=sim_compute_s,
-                                    phase_s=phase_s, name=name)
+                                    phase_s=phase_s, name=name,
+                                    faults=self.faults)
             self._streams.append(session)
             return session
 
     def close(self) -> None:
         """Flush every batcher and stream (pending requests and frames
-        still resolve; stream leases are released)."""
-        self._closed = True
+        still resolve; stream leases are released). Idempotent: the
+        closed flag flips under the lock, so a racing submit either beats
+        the flip (and drains normally) or gets the typed rejection."""
         with self._lock:
+            if self._closed:
+                return
+            self._closed = True
             batchers = list(self._batchers.values())
             streams = list(self._streams)
         for s in streams:
@@ -161,12 +219,27 @@ class Server:
 
     # ------------------------------------------------------------------
 
+    @staticmethod
+    def _stats_key(key: tuple) -> str:
+        """Human-readable per-network stats key. Includes the compute
+        dtype (since PR 7 dtype joins ``engine_key``, fp32 and bf16
+        variants of one network are distinct batchers — keying stats by
+        (network, input_size) alone made them overwrite each other), and
+        the param dtype when it differs from the compute dtype."""
+        name, img, _device, dtype, param_dtype = key
+        parts = [str(name), str(img), str(dtype)]
+        if param_dtype != dtype:
+            parts.append(f"params={param_dtype}")
+        return "/".join(parts)
+
     def stats(self) -> dict:
-        """Cache counters, per-network batcher aggregates (queue depth,
-        dispatch causes, deadline telemetry), per-stream deadline stats."""
+        """Cache counters (including degraded-mode rebuilds), per-network
+        batcher aggregates (queue depth, dispatch causes, shed/retry/
+        breaker telemetry), per-stream deadline stats."""
         with self._lock:
-            per_net = {"/".join(map(str, k[:2])): b.stats()
+            per_net = {self._stats_key(k): b.stats()
                        for k, b in self._batchers.items()}
             streams = {s.name: s.stats() for s in self._streams}
-        return {"cache": self.engines.stats(), "networks": per_net,
-                "streams": streams}
+        cache = self.engines.stats()
+        return {"cache": cache, "networks": per_net, "streams": streams,
+                "degraded": cache["degraded"]}

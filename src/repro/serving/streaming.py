@@ -107,11 +107,16 @@ class StreamSession:
     def __init__(self, lease, *, fps: float = 30.0,
                  deadline_ms: float | None = None, clock: Clock | None = None,
                  sim_compute_s: float | None = None, phase_s: float = 0.0,
-                 name: str = "stream"):
+                 name: str = "stream", faults=None):
         assert fps > 0
         self.lease = lease
         self.engine = lease.engine
         self.name = name
+        # FaultInjector (site "frame"): scripted per-frame errors settle
+        # the frame and keep the stream alive; scripted latency spikes
+        # sleep in threaded mode and add to the compute charge under the
+        # simulated clock (deterministic deadline misses).
+        self._faults = faults
         self.period_s = 1.0 / fps
         self.deadline_s = (self.period_s if deadline_ms is None
                            else deadline_ms / 1e3)
@@ -258,7 +263,12 @@ class StreamSession:
 
     def _run_frame(self, frame: Frame, buf, *, dispatch: float) -> None:
         frame.dispatch = dispatch
+        delay = 0.0
         try:
+            if self._faults is not None:
+                delay = self._faults.check("frame")
+                if delay and self.sim_compute_s is None:
+                    time.sleep(delay)  # sim mode charges it arithmetically
             logits = jax.block_until_ready(self.engine.run_stream(buf))
         except Exception as e:  # settle the frame, keep the stream alive
             frame.done = (dispatch + self.sim_compute_s
@@ -270,7 +280,10 @@ class StreamSession:
             frame.future.set_exception(e)
             return
         if self.sim_compute_s is not None:
-            frame.done = dispatch + self.sim_compute_s
+            # injected latency joins the deterministic compute charge, so
+            # a scripted spike produces the exact same miss accounting on
+            # every run — chaos tests gate on it
+            frame.done = dispatch + self.sim_compute_s + delay
             self._free_at = frame.done
         else:
             frame.done = self.clock.now()

@@ -314,6 +314,120 @@ def test_quant_committed_baseline_vs_itself_is_clean():
     assert rows["int8"]["weight_bytes"] < rows["float32"]["weight_bytes"]
 
 
+def _serving_payload(shed_rate=0.8, unresolved=0, p95=0.25, bound=0.34,
+                     throughput=6.8):
+    offered = 80
+    shed = int(shed_rate * offered)
+    return {
+        "kind": "serving",
+        "networks": ["resnet18", "mobilenet_v2"],
+        "scenarios": {
+            "steady": {"requests": 24, "throughput_rps": throughput,
+                       "wall_s": 24 / throughput},
+            "overload": {"offered": offered, "accepted": offered - shed,
+                         "shed": shed, "shed_rate": shed / offered,
+                         "unresolved": unresolved, "max_queue": 4,
+                         "accepted_p50_s": p95 * 0.9, "accepted_p95_s": p95,
+                         "p95_bound_s": bound},
+        },
+    }
+
+
+def test_serving_clean_comparison_passes():
+    base = _serving_payload()
+    problems, _ = compare_bench.compare_serving(base, copy.deepcopy(base))
+    assert problems == []
+
+
+def test_serving_shed_rate_drift_beyond_band_fails():
+    base = _serving_payload(shed_rate=0.8)
+    cand = _serving_payload(shed_rate=0.4)  # |Δ| > 0.3 default band
+    problems, _ = compare_bench.compare_serving(base, cand)
+    assert any("shed_rate moved" in p for p in problems)
+    # within the band: noted, not fatal
+    cand = _serving_payload(shed_rate=0.65)
+    problems, notes = compare_bench.compare_serving(base, cand)
+    assert problems == []
+    assert any("shed_rate changed" in n for n in notes)
+
+
+def test_serving_zero_shed_under_overload_fails():
+    """No shedding at ~2x+ offered load means the admission bound is
+    silently unenforced — an unbounded queue again."""
+    base = _serving_payload()
+    cand = _serving_payload(shed_rate=0.0)
+    problems, _ = compare_bench.compare_serving(base, cand)
+    assert any("admission bound is not being enforced" in p
+               for p in problems)
+
+
+def test_serving_unresolved_future_fails():
+    base = _serving_payload()
+    cand = _serving_payload(unresolved=2)
+    problems, _ = compare_bench.compare_serving(base, cand)
+    assert any("never resolved" in p for p in problems)
+
+
+def test_serving_p95_over_bound_fails():
+    base = _serving_payload()
+    cand = _serving_payload(p95=0.5, bound=0.34)
+    problems, _ = compare_bench.compare_serving(base, cand)
+    assert any("exceeds" in p and "bound" in p for p in problems)
+
+
+def test_serving_throughput_is_noted_not_gated():
+    base = _serving_payload(throughput=6.8)
+    cand = _serving_payload(throughput=1.0)  # wall-clock: never gated
+    problems, notes = compare_bench.compare_serving(base, cand)
+    assert problems == []
+    assert any("not gated" in n for n in notes)
+
+
+def test_serving_kind_detection_beats_scenarios_duck_typing():
+    """The serving artifact carries "scenarios" like streaming payloads;
+    the explicit "kind" field must win over the structural fallback."""
+    assert compare_bench._kind(_serving_payload()) == "serving"
+    assert compare_bench._kind(_stream_payload()) == "streaming"
+    legacy = _stream_payload()
+    del legacy["kind"]  # pre-"kind" streaming artifact: duck-typed
+    assert compare_bench._kind(legacy) == "streaming"
+
+
+def test_serving_cli_detects_kind_and_gates(tmp_path):
+    script = REPO / "tools" / "compare_bench.py"
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(_serving_payload()))
+    ok = subprocess.run([sys.executable, str(script), str(base), str(base)],
+                        capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stderr
+    assert "serving scenarios" in ok.stdout
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(_serving_payload(unresolved=1)))
+    r = subprocess.run([sys.executable, str(script), str(base), str(bad)],
+                       capture_output=True, text=True)
+    assert r.returncode == 1 and "never resolved" in r.stderr
+    mixed = subprocess.run(
+        [sys.executable, str(script), str(base),
+         str(REPO / "benchmarks" / "baseline" / "BENCH_streaming.json")],
+        capture_output=True, text=True)
+    assert mixed.returncode == 1
+    assert "different artifact kinds" in mixed.stderr
+
+
+def test_serving_committed_baseline_vs_itself_is_clean():
+    baseline = REPO / "benchmarks" / "baseline" / "BENCH_serving.json"
+    d = json.loads(baseline.read_text())
+    problems, _ = compare_bench.compare_serving(d, copy.deepcopy(d))
+    assert problems == []
+    over = d["scenarios"]["overload"]
+    # the invariants the committed artifact must itself satisfy: real
+    # shedding, zero unresolved futures, p95 under its own bound
+    assert over["shed_rate"] > 0
+    assert over["unresolved"] == 0
+    assert over["accepted_p95_s"] <= over["p95_bound_s"]
+    assert d["scenarios"]["steady"]["throughput_rps"] > 0
+
+
 def test_cli_exit_codes(tmp_path):
     """The committed baseline vs itself exits 0; vs an injected xla
     fallback exits 1 — what the CI self-check step relies on."""

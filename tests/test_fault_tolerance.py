@@ -1,0 +1,135 @@
+"""Fault-tolerance runtime tests: StragglerWatch breach accounting and
+``resilient_train``'s restore-from-checkpoint replay path.
+
+``TransientFailure`` raised here is the same type the serving tier's
+retry policy keys on (``repro.serving.resilience`` re-exports it) — one
+transient-error vocabulary across the repo, exercised from both sides.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.runtime.fault_tolerance import (
+    StragglerWatch,
+    TransientFailure,
+    resilient_train,
+)
+
+# ----------------------------------------------------------------------
+# StragglerWatch
+
+
+def test_straggler_warmup_steps_are_ignored():
+    """Compile-time spikes in the first ``warmup`` observations must not
+    count as breaches, and no deadline exists until the post-warmup
+    history reaches 5 samples."""
+    w = StragglerWatch(factor=3.0, max_breaches=5, warmup=3)
+    for _ in range(3):
+        w.observe(10.0)  # huge "compile" steps: ignored
+    for _ in range(4):
+        w.observe(0.01)  # only 4 post-warmup samples: still no deadline
+    assert w.breaches == 0
+    w.observe(0.01)  # 5th sample arms the watch
+    assert w.breaches == 0
+
+
+def test_straggler_breach_accounting_and_raise():
+    w = StragglerWatch(factor=3.0, max_breaches=2, warmup=0)
+    for _ in range(5):
+        w.observe(0.01)
+    w.observe(0.02)  # 2x p50: under the 3x deadline, no breach
+    assert w.breaches == 0
+    w.observe(0.1)  # 10x p50: breach 1 of 2
+    assert w.breaches == 1
+    with pytest.raises(RuntimeError, match="straggler"):
+        w.observe(0.1)  # breach 2 of 2: request the reschedule
+    assert w.breaches == 2
+
+
+def test_straggler_median_tracks_history():
+    """The deadline follows the *running* p50, so a workload that
+    legitimately slows down re-baselines instead of breaching forever."""
+    w = StragglerWatch(factor=3.0, max_breaches=100, warmup=0)
+    for _ in range(5):
+        w.observe(0.01)
+    for _ in range(20):
+        w.observe(0.05)  # new steady state: 5x the old p50
+    breaches_after_shift = w.breaches
+    w.observe(0.06)  # near the NEW p50: must not breach
+    assert w.breaches == breaches_after_shift
+
+
+# ----------------------------------------------------------------------
+# resilient_train replay
+
+
+class _StepPipeline:
+    """(seed, step)-pure data pipeline: batch(step) == step. Purity is
+    what makes checkpoint replay *correct*, so the test's final state
+    must equal the fault-free sum regardless of where restarts landed."""
+
+    def batch(self, step, mesh=None, rules=None):
+        return jnp.float32(step)
+
+
+def _train_step(state, batch):
+    w = state["w"] + batch
+    return {"w": w}, {"loss": w}
+
+
+def test_resilient_train_restores_from_checkpoint_and_replays(tmp_path):
+    """A transient fault after a checkpoint rolls back to that checkpoint
+    and replays the tail; the (seed, step)-pure pipeline makes the final
+    state bit-identical to the fault-free run."""
+    ckpt = CheckpointManager(tmp_path, async_save=False)
+    total = 6
+    fired = []
+
+    def inject(step):
+        if step == 5 and not fired:  # once, after the step-4 checkpoint
+            fired.append(step)
+            raise TransientFailure("injected device loss at step 5")
+
+    state, step, failures = resilient_train(
+        state={"w": jnp.float32(0.0)}, train_step=_train_step,
+        pipeline=_StepPipeline(), ckpt=ckpt, total_steps=total,
+        ckpt_every=2, fail_injector=inject)
+    assert step == total and failures == 1
+    assert float(state["w"]) == float(sum(range(total)))  # 0+1+...+5
+    # the rollback really came from the step-4 checkpoint on disk
+    restored_step, host_state = ckpt.restore(4)
+    assert restored_step == 4
+    assert float(np.asarray(host_state["w"])) == float(sum(range(4)))
+
+
+def test_resilient_train_without_checkpoint_replays_from_the_top(tmp_path):
+    """A fault before the first checkpoint exists has nothing to restore:
+    the loop replays from ``start_step`` and still converges."""
+    ckpt = CheckpointManager(tmp_path, async_save=False)
+    fired = []
+
+    def inject(step):
+        if step == 1 and not fired:
+            fired.append(step)
+            raise TransientFailure("injected before any checkpoint")
+
+    state, step, failures = resilient_train(
+        state={"w": jnp.float32(0.0)}, train_step=_train_step,
+        pipeline=_StepPipeline(), ckpt=ckpt, total_steps=3,
+        ckpt_every=10, fail_injector=inject)
+    assert (step, failures) == (3, 1)
+    assert float(state["w"]) == float(sum(range(3)))
+
+
+def test_resilient_train_gives_up_past_max_failures(tmp_path):
+    ckpt = CheckpointManager(tmp_path, async_save=False)
+
+    def always_fail(step):
+        raise TransientFailure("persistent fault")
+
+    with pytest.raises(TransientFailure):
+        resilient_train(
+            state={"w": jnp.float32(0.0)}, train_step=_train_step,
+            pipeline=_StepPipeline(), ckpt=ckpt, total_steps=3,
+            ckpt_every=1, max_failures=2, fail_injector=always_fail)

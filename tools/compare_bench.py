@@ -5,7 +5,9 @@ Usage:  python tools/compare_bench.py BASELINE CANDIDATE
             [--proxy-tolerance 0.25] [--est-tolerance 0.10]
             [--miss-tolerance 0.0]
 
-Three artifact kinds are accepted, auto-detected from the payload:
+Four artifact kinds are accepted, auto-detected from the payload (an
+explicit top-level ``"kind"`` field wins; the structural fallbacks below
+cover older artifacts):
 
   * **conv** (``BENCH_conv.json``, has ``layers``) — the per-layer
     algorithm/cost gate described below;
@@ -14,6 +16,13 @@ Three artifact kinds are accepted, auto-detected from the payload:
     and frame-drop rate must not exceed the baseline by more than
     ``--miss-tolerance`` (absolute; the simulation is deterministic, so
     the default tolerance is 0);
+  * **serving** (``BENCH_serving.json``, ``"kind": "serving"``) — the
+    overload gate: the overload scenario must actually shed
+    (``shed_rate > 0``, within ``--shed-tolerance`` of the baseline),
+    every accepted request must resolve (``unresolved == 0``), and
+    accepted-request p95 latency must stay under the scenario's
+    ``p95_bound_s`` — bounded queues trade rejections for bounded
+    latency, and this gate holds both halves of that trade;
   * **quant** (``BENCH_quant.json``, has ``rows``) — the
     accuracy-vs-speed gate: per precision row, top-1 agreement with the
     fp32 reference must not drop below the baseline by more than
@@ -236,7 +245,78 @@ def compare_quant(baseline: dict, candidate: dict, *,
     return problems, notes
 
 
+def compare_serving(baseline: dict, candidate: dict, *,
+                    shed_tolerance: float = 0.3) -> tuple[list[str],
+                                                          list[str]]:
+    """Serving-artifact gate. The overload scenario carries the
+    invariants (throughput numbers are wall-clock trend lines — noted,
+    never gated):
+
+      * **every accepted request resolved** — ``unresolved`` must be 0:
+        an admitted Future that never settles is the worst serving bug
+        this subsystem can have, worse than any rejection;
+      * **overload actually sheds** — ``shed_rate`` must be > 0 (the
+        scenario offers ~2x+ capacity; zero shed means the admission
+        bound silently stopped being enforced and the queue is unbounded
+        again) and within ``shed_tolerance`` (absolute) of the baseline
+        rate in either direction;
+      * **bounded accepted latency** — ``accepted_p95_s`` must stay under
+        the scenario's own ``p95_bound_s``: shedding exists precisely so
+        admitted requests keep a bounded queue ahead of them.
+
+    -> (problems, notes)."""
+    problems, notes = [], []
+    base, cand = baseline["scenarios"], candidate["scenarios"]
+    common = sorted(base.keys() & cand.keys())
+    if not common:
+        return ["no common scenarios between baseline and candidate"], notes
+    for only, names in (("baseline", base.keys() - cand.keys()),
+                        ("candidate", cand.keys() - base.keys())):
+        if names:
+            notes.append(f"scenarios only in {only} (skipped): "
+                         f"{sorted(names)}")
+    for name in common:
+        b, c = base[name], cand[name]
+        if "shed_rate" in b or "shed_rate" in c:  # the overload leg
+            if c.get("unresolved", 0):
+                problems.append(
+                    f"{name}: {c['unresolved']} accepted request(s) never "
+                    f"resolved — every admitted Future must settle")
+            b_rate, c_rate = b.get("shed_rate"), c.get("shed_rate")
+            if b_rate is not None and c_rate is not None:
+                if c_rate <= 0:
+                    problems.append(
+                        f"{name}: shed_rate is 0 under ~2x+ offered load — "
+                        f"the admission bound is not being enforced")
+                elif abs(c_rate - b_rate) > shed_tolerance:
+                    problems.append(
+                        f"{name}: shed_rate moved {b_rate:.3f} -> "
+                        f"{c_rate:.3f} (> ±{shed_tolerance:.2f} allowed)")
+                elif c_rate != b_rate:
+                    notes.append(f"{name}: shed_rate changed "
+                                 f"{b_rate:.3f} -> {c_rate:.3f}")
+            p95, bound = c.get("accepted_p95_s"), c.get("p95_bound_s")
+            if p95 is not None and bound is not None and p95 > bound:
+                problems.append(
+                    f"{name}: accepted-request p95 {p95:.3f}s exceeds the "
+                    f"{bound:.3f}s bound — shedding is no longer keeping "
+                    f"admitted latency bounded")
+            if b.get("offered") != c.get("offered"):
+                notes.append(f"{name}: offered load changed "
+                             f"{b.get('offered')} -> {c.get('offered')}")
+        if "throughput_rps" in b and "throughput_rps" in c:
+            notes.append(
+                f"{name}: throughput {b['throughput_rps']:.1f} -> "
+                f"{c['throughput_rps']:.1f} req/s (wall-clock, not gated)")
+    return problems, notes
+
+
 def _kind(payload: dict) -> str:
+    # explicit kind wins: the serving artifact carries "scenarios" too,
+    # so duck-typing alone would misread it as a streaming artifact
+    k = payload.get("kind")
+    if k:
+        return k
     if "scenarios" in payload:
         return "streaming"
     if "rows" in payload:
@@ -258,6 +338,9 @@ def main(argv=None) -> int:
     ap.add_argument("--agreement-tolerance", type=float, default=0.13,
                     help="allowed absolute top-1 agreement drop per "
                          "precision row (quant artifacts)")
+    ap.add_argument("--shed-tolerance", type=float, default=0.3,
+                    help="allowed absolute shed-rate drift in the overload "
+                         "scenario (serving artifacts)")
     args = ap.parse_args(argv)
     with open(args.baseline) as f:
         baseline = json.load(f)
@@ -272,6 +355,10 @@ def main(argv=None) -> int:
         problems, notes = compare_streaming(
             baseline, candidate, miss_tolerance=args.miss_tolerance)
         what = f"{len(candidate['scenarios'])} scenarios"
+    elif kinds[0] == "serving":
+        problems, notes = compare_serving(
+            baseline, candidate, shed_tolerance=args.shed_tolerance)
+        what = f"{len(candidate['scenarios'])} serving scenarios"
     elif kinds[0] == "quant":
         problems, notes = compare_quant(
             baseline, candidate,
