@@ -38,25 +38,33 @@ bench-compare:
 	$(PYTHON) tools/compare_bench.py benchmarks/baseline/BENCH_conv.json BENCH_conv.json
 
 # Micro-batched serving scenarios (>= 2 networks, one shared EngineCache
-# process): steady throughput/latency + the overload scenario (bounded
-# queue at ~2x+ capacity, typed shedding) -> BENCH_serving.json.
+# process): steady throughput/latency, the overload scenario (bounded
+# queue at ~2x+ capacity, typed shedding), and the load-sweep SLO curve
+# (offered-QPS ladder x p50/p95/p99 + shed rate) -> BENCH_serving.json.
 .PHONY: bench-serving
 bench-serving:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/run.py --serve BENCH_serving.json
 
+# Alias that names the sweep: regenerate the artifact and run the
+# SLO-curve gate against the committed baseline in one step.
+.PHONY: bench-sweep
+bench-sweep: bench-serving bench-compare-serving
+
 # Gate the fresh BENCH_serving.json against the committed baseline: fails
 # if the overload scenario stops shedding (unbounded queue again), any
-# accepted Future never resolved, accepted p95 exceeds the queue-depth
-# bound, or shed_rate drifts outside the band.
+# accepted Ticket never resolved, accepted p95 exceeds the queue-depth
+# bound, shed_rate drifts outside the band, or the sweep's SLO curve
+# breaks (shed below saturation, p95 over bound, non-monotone shed).
 .PHONY: bench-compare-serving
 bench-compare-serving:
 	$(PYTHON) tools/compare_bench.py benchmarks/baseline/BENCH_serving.json BENCH_serving.json
 
 # The chaos suite alone: scripted FaultInjector runs over retry/breaker/
-# degrade/shed paths plus the fault-tolerance runtime tests.
+# degrade/shed paths, the fault-tolerance runtime tests, and the
+# wire-level protocol faults (fuzzed frames, client disconnects).
 .PHONY: chaos
 chaos:
-	PYTHONPATH=src $(PYTHON) -m pytest -q tests/test_chaos.py tests/test_fault_tolerance.py
+	PYTHONPATH=src $(PYTHON) -m pytest -q tests/test_chaos.py tests/test_fault_tolerance.py tests/test_protocol.py
 
 # Multi-stream deadline bench: K simulated-clock 30 fps streams (engine
 # leases) + on-demand classify contention -> BENCH_streaming.json.

@@ -167,29 +167,30 @@ def _serving_steady(networks, requests_per_net, max_batch, window_ms):
     networks through one shared-cache Server; every request must resolve."""
     import jax
 
-    from repro.serving import Server
+    from repro.serving import Server, ServingOptions
 
-    server = Server(tiny=True, max_batch=max_batch, window_ms=window_ms)
+    server = Server(tiny=True, options=ServingOptions(
+        max_batch=max_batch, window_ms=window_ms))
     key = jax.random.key(0)
     img = jax.random.normal(key, (32, 32, 3))
     for net in networks:  # build + jit outside the timed window
         server.run(net, img)
     t0 = time.perf_counter()
-    futures = []
+    tickets = []
     for i in range(requests_per_net):  # interleave networks: the shared
         for net in networks:           # cache serves them side by side
-            futures.append(server.submit(
+            tickets.append(server.submit(
                 net, jax.random.normal(jax.random.fold_in(key, i), (32, 32, 3))))
-    for f in futures:
-        f.result(timeout=600)
+    for t in tickets:
+        t.result(timeout=600)
     wall = time.perf_counter() - t0
     stats = server.stats()
     server.close()
     return {
-        "requests": len(futures),
+        "requests": len(tickets),
         "requests_per_net": requests_per_net,
         "wall_s": wall,
-        "throughput_rps": len(futures) / wall,
+        "throughput_rps": len(tickets) / wall,
         "per_network": stats["networks"],
         "cache": stats["cache"],
     }
@@ -226,12 +227,12 @@ def _serving_overload(network, *, offered=80, max_queue=4,
     """
     import jax
 
-    from repro.serving import FaultInjector, Overloaded, Server
+    from repro.serving import FaultInjector, Overloaded, Server, ServingOptions
 
     faults = FaultInjector().delay_from("dispatch", 0,
                                         seconds=service_delay_s)
-    server = Server(tiny=True, max_batch=1, window_ms=0.5,
-                    max_queue=max_queue, faults=faults)
+    server = Server(tiny=True, options=ServingOptions(
+        max_batch=1, window_ms=0.5, max_queue=max_queue, faults=faults))
     key = jax.random.key(1)
     img = jax.random.normal(key, (32, 32, 3))
     server.warm(network)  # build outside the overloaded window
@@ -240,24 +241,24 @@ def _serving_overload(network, *, offered=80, max_queue=4,
     service_s = min(
         _timed(lambda: server.run(network, img)) for _ in range(3))
     p95_bound_s = (max_queue + 3) * service_s
-    futures, shed = [], 0
+    tickets, shed = [], 0
     t0 = time.perf_counter()
     for i in range(offered):
         try:
-            futures.append(server.submit(network, img))
+            tickets.append(server.submit(network, img))
         except Overloaded:
             shed += 1
         time.sleep(submit_interval_s)
     unresolved = 0
-    for f in futures:
+    for t in tickets:
         try:
-            f.result(timeout=600)
+            t.result(timeout=600)
         except Exception:
             unresolved += 1  # an accepted request MUST resolve
     wall = time.perf_counter() - t0
     per_net = server.stats()["networks"]
     server.close()
-    accepted = len(futures)
+    accepted = len(tickets)
     b = next(iter(per_net.values()))  # single-network scenario
     return {
         "offered": offered,
@@ -279,31 +280,134 @@ def _serving_overload(network, *, offered=80, max_queue=4,
     }
 
 
+def _serving_sweep(network, *, load_factors=(0.25, 0.5, 2.0),
+                   n_requests=16, max_queue=4, service_delay_s=0.025):
+    """The SLO-curve leg: an offered-QPS ladder against one server,
+    per-rung p50/p95/p99 + shed rate — so the bench gate holds a latency
+    curve, not one overload point.
+
+    Like the overload leg, a ``FaultInjector`` latency fault pins the
+    per-dispatch service time to a known floor, and capacity is
+    *measured* on the spot (``capacity_qps = 1 / warm service time``), so
+    the rungs are machine-portable: each rung offers
+    ``load_factor * capacity_qps``, arrivals paced open-loop. The
+    invariants the gate holds per rung:
+
+      * **below saturation** (load_factor < 1): ``shed_rate == 0`` and
+        p95 under the derived ``p95_bound_s`` — an unloaded server must
+        not reject or queue;
+      * **above saturation**: shedding engages (rate > 0) while accepted
+        p95 stays bounded — the overload trade, now anchored to a curve;
+      * **monotone shed** — shed_rate must not decrease as offered load
+        rises: a non-monotone curve means admission control is load-
+        dependent in the wrong direction;
+      * every accepted request resolves (``unresolved == 0``), at every
+        rung.
+    """
+    import jax
+
+    from repro.serving import FaultInjector, Rejected, Server, ServingOptions
+
+    faults = FaultInjector().delay_from("dispatch", 0,
+                                        seconds=service_delay_s)
+    server = Server(tiny=True, options=ServingOptions(
+        max_batch=1, window_ms=0.5, max_queue=max_queue, faults=faults))
+    key = jax.random.key(2)
+    img = jax.random.normal(key, (32, 32, 3))
+    server.warm(network)  # build + jit outside every timed rung
+    service_s = min(
+        _timed(lambda: server.run(network, img)) for _ in range(3))
+    capacity_qps = 1.0 / service_s
+    p95_bound_s = (max_queue + 3) * service_s
+    rungs = []
+    for lf in load_factors:
+        offered_qps = lf * capacity_qps
+        interval = 1.0 / offered_qps
+        tickets, shed = [], 0
+        t0 = time.perf_counter()
+        for _ in range(n_requests):
+            try:
+                tickets.append(server.submit(network, img))
+            except Rejected:
+                shed += 1
+            time.sleep(interval)
+        lats, unresolved = [], 0
+        for t in tickets:
+            try:
+                t.result(timeout=600)
+                lats.append(t.latency)
+            except Exception:
+                unresolved += 1
+        wall = time.perf_counter() - t0
+        lats.sort()
+
+        def pct(q):
+            if not lats:
+                return None
+            return lats[min(len(lats) - 1,
+                            round(q / 100 * (len(lats) - 1)))]
+
+        rungs.append({
+            "load_factor": lf,
+            "offered_qps": offered_qps,
+            "offered": n_requests,
+            "accepted": len(tickets),
+            "shed": shed,
+            "shed_rate": shed / n_requests,
+            "unresolved": unresolved,
+            "p50_s": pct(50),
+            "p95_s": pct(95),
+            "p99_s": pct(99),
+            "wall_s": wall,
+        })
+    stats = server.stats()
+    server.close()
+    return {
+        "network": network,
+        "n_requests": n_requests,
+        "max_queue": max_queue,
+        "service_delay_s": service_delay_s,
+        "measured_service_s": service_s,
+        "capacity_qps": capacity_qps,
+        "p95_bound_s": p95_bound_s,
+        "scheduler": stats["scheduler"],
+        "rungs": rungs,
+    }
+
+
 def emit_serving_json(path, networks=("resnet18", "mobilenet_v2"),
                       requests_per_net=12, max_batch=4, window_ms=20.0):
     """Run the serving scenarios and dump BENCH_serving.json.
 
-    Two scenarios: **steady** — interleaved single-image requests per
+    Three scenarios: **steady** — interleaved single-image requests per
     network through one micro-batching Server (shared EngineCache),
     per-network throughput/latency + cache stats; **overload** — ~2x+
     capacity offered against a bounded queue, proving admission control
     sheds with typed ``Overloaded`` while accepted requests keep bounded
-    latency. The CI gate (tools/compare_bench.py) holds the overload
-    invariants against the committed baseline.
+    latency; **sweep** — an offered-QPS ladder (fractions and multiples
+    of measured capacity) recording p50/p95/p99 + shed rate per rung, so
+    the gate holds the whole SLO curve. The CI gate
+    (tools/compare_bench.py) holds the overload and sweep invariants
+    against the committed baseline.
     """
     assert len(networks) >= 2, "serving bench covers >= 2 networks"
     steady = _serving_steady(networks, requests_per_net, max_batch,
                              window_ms)
     overload = _serving_overload(networks[0])
+    sweep = _serving_sweep(networks[0])
     payload = {
         "kind": "serving",
         "networks": list(networks),
         "max_batch": max_batch,
         "window_ms": window_ms,
-        "scenarios": {"steady": steady, "overload": overload},
+        "scenarios": {"steady": steady, "overload": overload,
+                      "sweep": sweep},
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
+    rung_summary = ", ".join(
+        f"{r['load_factor']:g}x: p95 {r['p95_s']:.3f}s shed "
+        f"{r['shed_rate']:.2f}" for r in sweep["rungs"])
     print(f"wrote {path}: steady {steady['requests']} requests over "
           f"{len(networks)} networks in {steady['wall_s']:.2f}s "
           f"({steady['throughput_rps']:.1f} req/s, cache "
@@ -311,7 +415,8 @@ def emit_serving_json(path, networks=("resnet18", "mobilenet_v2"),
           f"hits); overload shed {overload['shed']}/{overload['offered']} "
           f"(rate {overload['shed_rate']:.2f}), accepted p95 "
           f"{overload['accepted_p95_s']:.3f}s <= {overload['p95_bound_s']}s "
-          f"bound, {overload['unresolved']} unresolved")
+          f"bound, {overload['unresolved']} unresolved; sweep "
+          f"[{rung_summary}]")
 
 
 def emit_streaming_json(path, *, networks=("resnet18", "mobilenet_v2"),
@@ -334,7 +439,7 @@ def emit_streaming_json(path, *, networks=("resnet18", "mobilenet_v2"),
 
     import jax
 
-    from repro.serving import Server, StreamScheduler
+    from repro.serving import Server, ServingOptions, StreamScheduler
 
     key = jax.random.key(0)
     imgs = [jax.random.normal(jax.random.fold_in(key, i), (32, 32, 3))
@@ -343,8 +448,8 @@ def emit_streaming_json(path, *, networks=("resnet18", "mobilenet_v2"),
     out_scenarios = {}
     t_start = time.perf_counter()
     for name, charge_s in scenarios:
-        server = Server(tiny=True, max_batch=4, window_ms=5.0,
-                        deadline_ms=None)
+        server = Server(tiny=True, options=ServingOptions(
+            max_batch=4, window_ms=5.0))
         for net in networks:  # build + jit outside the measured window
             server.run(net, imgs[0])
         streams = [server.open_stream(networks[i % len(networks)], fps=fps,

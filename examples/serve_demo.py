@@ -1,20 +1,29 @@
-"""Serving demo: many model variants, one process, micro-batched requests.
+"""Serving demo: many model variants, one process, a continuous-batching
+front door.
 
-The paper's deployment scenario is single-image requests arriving one at a
-time; this demo drives that end to end through the serving subsystem:
+The paper's deployment scenario is single-image requests arriving one at
+a time; this demo drives that end to end through the serving subsystem:
 
   1. one ``Server`` holds one LRU ``EngineCache`` — resnet18 and
-     mobilenet_v2 (tiny variants) are tuned/jitted once each and shared;
+     mobilenet_v2 (tiny variants) are tuned/jitted once each and shared —
+     configured with a frozen ``ServingOptions``;
   2. a burst of concurrent single-image requests per network is coalesced
-     by each network's micro-batcher into padded-batch dispatches
-     (lone requests keep the single-image fast path);
-  3. outputs are bitwise-equal to sequential ``engine.run`` calls — the
-     demo checks this explicitly;
-  4. the server's stats show the batch histogram, per-request latency and
-     the cache hit/miss/eviction counters.
+     by each network's micro-batcher into padded-batch dispatches, new
+     requests joining the forming batch mid-flight (lone requests keep
+     the single-image fast path); every dispatch routes through the
+     shared cross-network ``DeviceScheduler``;
+  3. each ``Server.submit`` returns a ``Ticket`` — the one result handle
+     (``.result(timeout)``, ``.latency``);
+  4. the same requests are replayed over the wire: a ``ServerEndpoint``
+     socket + ``AsyncClient`` with ``await client.classify(...)``;
+  5. outputs are bitwise-equal to sequential ``engine.run`` calls — in
+     process AND over the socket — the demo checks this explicitly;
+  6. the server's stats show the batch histogram, mid-flight joins,
+     per-request latency, scheduler counters, and the cache counters.
 
     PYTHONPATH=src python examples/serve_demo.py
 """
+import asyncio
 import sys
 import threading
 from pathlib import Path
@@ -26,7 +35,7 @@ import numpy as np
 
 from repro.configs import get, tiny_variant
 from repro.core import InferenceEngine
-from repro.serving import Server
+from repro.serving import AsyncClient, Server, ServerEndpoint, ServingOptions
 
 NETWORKS = ("resnet18", "mobilenet_v2")
 N_REQUESTS = 6
@@ -46,14 +55,15 @@ def main():
           f"{N_REQUESTS} sequential runs each")
 
     print("\n== micro-batched server (one shared-cache process) ==")
-    with Server(tiny=True, max_batch=4, window_ms=100.0) as server:
+    options = ServingOptions(max_batch=4, window_ms=100.0)
+    with Server(tiny=True, options=options) as server:
         for net in NETWORKS:
             server.warm(net)  # tune/jit ahead of traffic
-        futures = {net: [] for net in NETWORKS}
+        tickets = {net: [] for net in NETWORKS}
 
         def client(net):  # one thread per network fires a request burst
             for im in images:
-                futures[net].append(server.submit(net, im))
+                tickets[net].append(server.submit(net, im))
 
         threads = [threading.Thread(target=client, args=(net,))
                    for net in NETWORKS]
@@ -61,27 +71,51 @@ def main():
             t.start()
         for t in threads:
             t.join()
-        outs = {net: [np.asarray(f.result(timeout=600)) for f in futures[net]]
+        outs = {net: [np.asarray(t.result(timeout=600))
+                      for t in tickets[net]]
                 for net in NETWORKS}
-        stats = server.stats()
 
-    print("\n== bitwise check vs sequential (micro-batching never changes "
-          "numerics) ==")
-    for net in NETWORKS:
-        same = all(np.array_equal(a, b)
-                   for a, b in zip(truth[net], outs[net]))
-        print(f"  {net:13s} {N_REQUESTS} requests bitwise-equal: {same}")
-        assert same
+        print("\n== bitwise check vs sequential (micro-batching never "
+              "changes numerics) ==")
+        for net in NETWORKS:
+            same = all(np.array_equal(a, b)
+                       for a, b in zip(truth[net], outs[net]))
+            print(f"  {net:13s} {N_REQUESTS} requests bitwise-equal: {same}")
+            assert same
+
+        print("\n== the wire: ServerEndpoint socket + AsyncClient ==")
+        with ServerEndpoint(server) as endpoint:
+            host, port = endpoint.address
+
+            async def remote(net):
+                async with await AsyncClient.connect(host, port) as cl:
+                    return await asyncio.gather(
+                        *(cl.classify(net, im) for im in images))
+
+            for net in NETWORKS:
+                wire = asyncio.run(remote(net))
+                same = all(np.array_equal(a, b)
+                           for a, b in zip(truth[net], wire))
+                print(f"  {net:13s} {N_REQUESTS} requests over "
+                      f"{host}:{port} bitwise-equal: {same}")
+                assert same
+
+        stats = server.stats()
 
     print("\n== server stats ==")
     cache = stats["cache"]
     print(f"  engine cache: {cache['size']}/{cache['capacity']} entries, "
           f"{cache['misses']} builds, {cache['hits']} hits, "
           f"{cache['evictions']} evictions")
+    sched = stats["scheduler"]
+    print(f"  device scheduler: {sched['jobs']} dispatches over "
+          f"{len(sched['completed'])} networks, "
+          f"queue high-water {sched['depth_high_water']}")
     for label, b in stats["networks"].items():
         lat = b["latency_mean_s"]
         print(f"  {label:20s} {b['requests']} reqs in {b['dispatches']} "
               f"dispatches, batches {b['batch_histogram']}, "
+              f"{b['joined_forming']} joined mid-flight, "
               f"mean latency {lat * 1e3:.1f} ms")
 
 

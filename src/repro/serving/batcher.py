@@ -1,10 +1,19 @@
-"""Micro-batcher: coalesce concurrent single-image requests into one
-padded-batch dispatch within a deadline window — and survive overload.
+"""Continuous micro-batching: coalesce concurrent single-image requests
+into one padded-batch dispatch with mid-flight admission — and survive
+overload.
 
 The paper's premise is batch-1 requests arriving one at a time; under
 concurrent traffic the device still prefers one dispatch over N. The
-batcher holds the first request of a batch for at most ``window_ms``,
-coalescing whatever else arrives (up to ``max_batch``), then dispatches:
+batcher keeps one **forming batch** (the pending deque): a new request is
+admitted into it mid-flight — it joins the *next* dispatch whenever its
+padded power-of-two shape still fits (fewer than ``max_batch`` requests
+already formed), instead of waiting for a window of its own. The batch
+goes to the device when it fills, or when the window measured from its
+**oldest request's arrival** expires — so a request that queued up behind
+a long dispatch goes out the moment the engine frees up, never paying a
+fresh window on top of the wait (the continuous-batching property; the
+deadline-window design it replaces restarted the window at dequeue).
+Dispatch shape:
 
   * **batch == 1** — the single-image fast path: ``engine.run(image)``,
     exactly the paper's tuned per-layer dispatch, zero batching overhead;
@@ -15,19 +24,28 @@ coalescing whatever else arrives (up to ``max_batch``), then dispatches:
 
 ``run_batch`` maps the *single-image* computation over the batch inside
 one jitted call (``lax.map``), so outputs are bitwise-equal to sequential
-``engine.run`` calls — micro-batching changes scheduling, never numerics.
+``engine.run`` calls — micro-batching changes scheduling, never numerics,
+and mid-flight admission changes only *when* a request dispatches, never
+what its batch computes.
+
+Every dispatch can be routed through a shared ``DeviceScheduler``
+(``scheduler=``): the batcher's loop thread then submits the attempt as a
+job and blocks while the device thread runs it under the cross-network
+fairness policy — and because the loop thread is blocked *outside* the
+admission lock, the next batch keeps forming mid-flight underneath it.
 
 Overload and failure handling (see docs/serving.md "Overload & failure
 semantics"):
 
-  * **admission control** — ``max_queue`` bounds the queue; a submit
-    beyond it is rejected *immediately* with ``Overloaded`` (typed, cheap,
-    before any work). A closed batcher rejects the same way.
-  * **deadline shedding** — with ``deadline_ms`` set, a request still
-    queued past its deadline (or cancelled by its client) is shed **at
-    dequeue** with ``DeadlineExceeded``: an expired request never burns a
-    dispatch, which is what keeps an overloaded queue from doing work
-    nobody is waiting for.
+  * **admission control** — ``max_queue`` bounds the pending deque; a
+    submit beyond it is rejected *immediately* with ``Overloaded`` (typed,
+    cheap, before any work). A closed batcher rejects the same way.
+  * **deadline shedding** — with ``deadline_ms`` set (per-batcher default
+    or per-request override), a request still queued past its deadline
+    (or cancelled by its client) is shed **at dequeue** with
+    ``DeadlineExceeded``: an expired request never burns a dispatch,
+    which is what keeps an overloaded queue from doing work nobody is
+    waiting for.
   * **retry + breaker** — a dispatch raising ``TransientFailure`` (the
     repo-wide transient-error type) is retried with capped exponential
     backoff (``retry``); *every* dispatch failure feeds the per-engine
@@ -41,16 +59,15 @@ semantics"):
 """
 from __future__ import annotations
 
-import queue
 import threading
 import time
-from concurrent.futures import Future
+from collections import deque
 
 import jax
 import jax.numpy as jnp
 
 from repro.serving import request as req_mod
-from repro.serving.request import Request
+from repro.serving.request import Request, Ticket
 from repro.serving.resilience import (
     CircuitBreaker,
     CircuitOpen,
@@ -59,8 +76,6 @@ from repro.serving.resilience import (
     RetryPolicy,
     TransientFailure,
 )
-
-_STOP = object()
 
 
 def bucket(n: int, max_batch: int) -> int:
@@ -76,9 +91,10 @@ def bucket(n: int, max_batch: int) -> int:
 class MicroBatcher:
     """One request loop around one engine.
 
-    ``submit`` is non-blocking and returns a Future; a daemon thread owns
-    the engine and is the only place dispatch happens, so callers never
-    contend on the device.
+    ``submit`` is non-blocking and returns a ``Ticket``; a daemon thread
+    owns batch formation, and dispatch happens either on that thread or —
+    with ``scheduler=`` — on the shared device thread under the
+    cross-network fairness policy, so callers never contend on the device.
     """
 
     def __init__(self, engine, *, max_batch: int = 8, window_ms: float = 2.0,
@@ -86,9 +102,11 @@ class MicroBatcher:
                  max_queue: int | None = None,
                  retry: RetryPolicy | None = None,
                  breaker: CircuitBreaker | None = None,
-                 degrade=None, faults=None):
+                 degrade=None, faults=None, scheduler=None,
+                 name: str | None = None):
         assert max_batch >= 1
         self.engine = engine
+        self.name = name if name is not None else f"batcher-{id(self):x}"
         # power-of-two invariant: bucket() pads to powers of two, so a
         # non-power-of-two cap would add one extra traced batch shape
         # (the clipped max_batch itself); round down at construction so
@@ -99,29 +117,31 @@ class MicroBatcher:
         # miss telemetry, it is the shed deadline: a request still queued
         # past arrival + deadline is failed at dequeue, before compute.
         self.deadline_s = None if deadline_ms is None else deadline_ms / 1e3
-        # admission bound: queued (admitted, not yet dequeued) requests
+        # admission bound: pending (admitted, not yet dequeued) requests
         # beyond this are rejected with Overloaded. None = unbounded.
         self.max_queue = max_queue
         self.retry = retry if retry is not None else RetryPolicy()
         self.breaker = breaker if breaker is not None else CircuitBreaker()
         self._degrade = degrade      # () -> replacement engine, or None
         self._faults = faults        # FaultInjector, or None
+        self._scheduler = scheduler  # DeviceScheduler, or None (inline)
         self.pad_batches = pad_batches
         self.dispatches: list[dict] = []  # {batch, padded, latencies}
-        # the loop thread appends to the dispatch log while stats() reads
-        # it from caller threads: every access goes through this lock
+        # the dispatch path appends to the dispatch log while stats()
+        # reads it from caller threads: every access takes this lock
         self._stats_lock = threading.Lock()
         self._causes = {"full": 0, "window": 0, "drain": 0}
         self._shed = {"overload": 0, "deadline": 0, "cancelled": 0,
                       "breaker": 0}
         self._retries = 0
+        self._joined = 0             # mid-flight admissions into a
+        #                              forming batch (pending was nonempty)
         self.degraded = 0            # engine swaps to the xla fallback
-        self._queue: queue.Queue = queue.Queue()
-        # _admit_lock makes (closed-check + depth-check + enqueue) atomic
-        # against close() and against racing submitters, so the admission
-        # bound is exact and nothing enqueues behind the stop sentinel
-        self._admit_lock = threading.Lock()
-        self._depth = 0
+        # _cond guards the forming batch: (closed-check + depth-check +
+        # append) is atomic against close() and racing submitters, so the
+        # admission bound is exact; the loop thread is the only consumer.
+        self._cond = threading.Condition()
+        self._pending: deque[Request] = deque()
         self._closed = False
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name=f"microbatcher-{id(self):x}")
@@ -129,40 +149,48 @@ class MicroBatcher:
 
     # ------------------------------------------------------------------
 
-    def submit(self, image) -> Future:
-        """Enqueue one (H, W, C) image; the Future resolves to (classes,)
+    def submit(self, image) -> Ticket:
+        """Enqueue one (H, W, C) image; the Ticket resolves to (classes,)
         logits. Raises ``Overloaded`` if the batcher is closed or the
         bounded queue is full (admission control — shed before work)."""
-        return self.submit_request(image).future
+        return Ticket(self.submit_request(image))
 
-    def submit_request(self, image) -> Request:
-        """Like ``submit`` but returns the ``Request`` record, so callers
-        (``Server.run``) can ``cancel()`` it on their own timeout."""
-        req = Request(image)
-        if self.deadline_s is not None:
-            req.deadline = req.arrival + self.deadline_s
-        with self._admit_lock:
+    def submit_request(self, image, *, deadline_ms: float | None = None,
+                       priority: int = 0) -> Request:
+        """Like ``submit`` but returns the ``Request`` record, so owners
+        (``Server``) can wrap it themselves. ``deadline_ms`` overrides
+        the batcher-wide shed deadline for this request; ``priority``
+        rides to the device scheduler's ordering key."""
+        req = Request(image, priority=priority)
+        deadline_s = (self.deadline_s if deadline_ms is None
+                      else deadline_ms / 1e3)
+        if deadline_s is not None:
+            req.deadline = req.arrival + deadline_s
+        with self._cond:
             if self._closed:
                 raise Overloaded("batcher is closed")
-            if self.max_queue is not None and self._depth >= self.max_queue:
+            if self.max_queue is not None \
+                    and len(self._pending) >= self.max_queue:
                 with self._stats_lock:
                     self._shed["overload"] += 1
                 raise Overloaded(
-                    f"queue full ({self._depth}/{self.max_queue} waiting); "
-                    f"request shed at admission")
-            self._depth += 1
-            self._queue.put(req)
+                    f"queue full ({len(self._pending)}/{self.max_queue} "
+                    f"waiting); request shed at admission")
+            if self._pending:  # mid-flight: joins the forming batch
+                self._joined += 1
+            self._pending.append(req)
+            self._cond.notify()
         return req
 
     def close(self, timeout: float | None = 30.0) -> None:
-        """Drain the queue, dispatch what's pending, stop the thread.
-        Idempotent; racing submits either land before the stop sentinel
-        (and drain) or are rejected with ``Overloaded``."""
-        with self._admit_lock:
+        """Flush the forming batch, dispatch what's pending, stop the
+        thread. Idempotent; racing submits either land before the closed
+        flag flips (and drain) or are rejected with ``Overloaded``."""
+        with self._cond:
             if self._closed:
                 return
             self._closed = True
-            self._queue.put(_STOP)
+            self._cond.notify_all()
         self._thread.join(timeout)
 
     def __enter__(self):
@@ -174,11 +202,9 @@ class MicroBatcher:
     # ------------------------------------------------------------------
 
     def _take(self, req: Request) -> bool:
-        """Dequeue-side bookkeeping + shedding: returns True if ``req``
-        should join the batch, False if it was shed (expired/cancelled)
-        before any compute was spent on it."""
-        with self._admit_lock:
-            self._depth -= 1
+        """Dequeue-side shedding: returns True if ``req`` should join the
+        dispatch, False if it was shed (expired/cancelled) before any
+        compute was spent on it."""
         now = time.perf_counter()
         if req.cancelled:
             with self._stats_lock:
@@ -187,55 +213,44 @@ class MicroBatcher:
                 f"request {req.id} cancelled by its client; shed at dequeue"))
             return False
         if req.expired(now):
+            budget = (req.deadline - req.arrival) * 1e3
             with self._stats_lock:
                 self._shed["deadline"] += 1
             req_mod.fail(req, DeadlineExceeded(
-                f"request {req.id} missed its {self.deadline_s * 1e3:g}ms "
-                f"deadline while queued; shed at dequeue"))
+                f"request {req.id} missed its {budget:g}ms deadline while "
+                f"queued; shed at dequeue"))
             return False
         return True
 
     def _loop(self) -> None:
-        stopping = False
-        while not stopping:
-            req = self._queue.get()  # block until traffic (or shutdown)
-            if req is _STOP:
-                break
-            if not self._take(req):
-                continue  # shed at dequeue: never starts a batch
-            batch = [req]
-            deadline = time.perf_counter() + self.window_s
-            while len(batch) < self.max_batch:
-                wait = deadline - time.perf_counter()
-                if wait <= 0:
-                    break
-                try:
-                    nxt = self._queue.get(timeout=wait)
-                except queue.Empty:
-                    break
-                if nxt is _STOP:
-                    stopping = True
-                    break
-                if self._take(nxt):
-                    batch.append(nxt)
-            cause = ("drain" if stopping
-                     else "full" if len(batch) >= self.max_batch
+        while True:
+            with self._cond:
+                while not self._pending and not self._closed:
+                    self._cond.wait()
+                if not self._pending:  # closed and drained: exit
+                    return
+                # the batching window is anchored at the OLDEST pending
+                # request's arrival — a batch that formed while the
+                # previous dispatch held the device goes out immediately
+                window_end = self._pending[0].arrival + self.window_s
+                while len(self._pending) < self.max_batch \
+                        and not self._closed:
+                    wait = window_end - time.perf_counter()
+                    if wait <= 0:
+                        break
+                    self._cond.wait(wait)
+                take = min(len(self._pending), self.max_batch)
+                raw = [self._pending.popleft() for _ in range(take)]
+                drain = self._closed
+            batch = [r for r in raw if self._take(r)]
+            if not batch:
+                continue  # everything shed at dequeue: no dispatch
+            cause = ("drain" if drain
+                     else "full" if len(raw) >= self.max_batch
                      else "window")
             with self._stats_lock:
                 self._causes[cause] += 1
             self._dispatch(batch)
-        # a submit racing close() can enqueue behind the _STOP sentinel;
-        # fail those requests instead of leaving their futures unresolved
-        # (same typed rejection as admission-control shedding)
-        while True:
-            try:
-                req = self._queue.get_nowait()
-            except queue.Empty:
-                return
-            if req is not _STOP:
-                with self._admit_lock:
-                    self._depth -= 1
-                req_mod.fail(req, Overloaded("batcher closed"))
 
     # ------------------------------------------------------------------
     # dispatch with retry / breaker / degraded-mode fallback
@@ -315,7 +330,17 @@ class MicroBatcher:
 
     def _dispatch(self, batch: list[Request]) -> None:
         try:
-            outs, padded = self._attempt(batch)
+            if self._scheduler is not None:
+                # the shared device thread runs the attempt under the
+                # cross-network fairness policy; this loop thread blocks
+                # here while the NEXT batch keeps forming via submit()
+                outs, padded = self._scheduler.run(
+                    lambda: self._attempt(batch),
+                    urgency=min(r.urgency for r in batch),
+                    priority=max(r.priority for r in batch),
+                    network=self.name)
+            else:
+                outs, padded = self._attempt(batch)
         except Exception as e:  # resolve, don't kill the loop
             for r in batch:
                 req_mod.fail(r, e)
@@ -334,11 +359,14 @@ class MicroBatcher:
     def stats(self) -> dict:
         """Dispatch-log aggregates: request count, batch-size histogram,
         latency mean/p50/p95/max (seconds, submit -> future resolution),
-        live queue depth, dispatch causes (full batch vs expired window
-        vs shutdown drain), deadline misses if an SLO is set, and the
-        resilience counters (sheds by cause, retries, breaker state,
-        degraded-mode swaps)."""
-        with self._stats_lock:  # snapshot: the loop thread appends live
+        live queue depth, mid-flight joins, dispatch causes (full batch
+        vs expired window vs shutdown drain), deadline misses if an SLO
+        is set, and the resilience counters (sheds by cause, retries,
+        breaker state, degraded-mode swaps)."""
+        with self._cond:
+            depth = len(self._pending)
+            joined = self._joined
+        with self._stats_lock:  # snapshot: the dispatch path appends live
             dispatches = list(self.dispatches)
             causes = dict(self._causes)
             shed = dict(self._shed)
@@ -359,9 +387,10 @@ class MicroBatcher:
         return {
             "requests": len(lats),
             "dispatches": len(dispatches),
-            "queue_depth": self._queue.qsize(),
+            "queue_depth": depth,
             "max_queue": self.max_queue,
             "window_ms": self.window_s * 1e3,
+            "joined_forming": joined,
             "dispatch_causes": causes,
             "batch_histogram": dict(sorted(hist.items())),
             "shed": shed,

@@ -1,16 +1,28 @@
-"""The serving front door: single-image requests in, logits futures out.
+"""The serving front door: single-image requests in, logits tickets out.
 
 One ``Server`` owns one ``EngineCache`` (shared across every network it
-serves) and one ``MicroBatcher`` per active network. ``submit`` routes a
-request to its network's batcher — building the engine through the cache
-on first sight — and returns immediately with a Future. ``open_stream``
-opens a fixed-rate ``StreamSession`` over the same cache: the session
-holds an engine lease (pinned against eviction) and its dispatch runs on
-its own thread, so K live streams and on-demand classify traffic share
-one cache without head-of-line blocking. This is the seam every future
-scaling layer (sharding, multi-backend, continuous batching) plugs into:
-everything above it speaks (network, image) -> logits, everything below
-it is the tuned-engine world.
+serves), one ``MicroBatcher`` per active network, and one
+``DeviceScheduler`` that all batchers dispatch through — N networks'
+forming batches interleave onto the accelerator oldest-deadline-first, so
+a cold or slow network cannot head-of-line block a fast one. ``submit``
+routes a request to its network's batcher — building the engine through
+the cache on first sight — and returns immediately with a ``Ticket``.
+``open_stream`` opens a fixed-rate ``StreamSession`` over the same cache:
+the session holds an engine lease (pinned against eviction) and its
+dispatch runs on its own thread. This is the seam every future scaling
+layer (sharding, multi-backend, remote endpoints) plugs into: everything
+above it speaks (network, image) -> logits, everything below it is the
+tuned-engine world. The wire tier (``serving/protocol.py`` +
+``serving/client.py``) sits on top of exactly this surface.
+
+Configuration is two frozen options objects: ``ServingOptions`` for the
+server-wide knobs (batching window, admission bound, shed deadline,
+retry/breaker policy, fault injection) and ``RequestOptions`` for
+per-call ones (dtype variant, deadline override, scheduler priority).
+The pre-PR-10 kwarg spellings (``Server(max_queue=..., deadline_ms=...,
+...)``, ``submit(..., dtype=...)``) still work through a deprecation
+shim that folds them into the options objects and warns once per call
+site.
 
 The front door is overload-safe (docs/serving.md "Overload & failure
 semantics"): ``max_queue`` bounds every batcher's queue and rejects
@@ -24,51 +36,109 @@ cache, and every stream session — the deterministic chaos-test hook.
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
-from concurrent.futures import TimeoutError as FutureTimeoutError
+import warnings
+from dataclasses import dataclass
 
 from repro.serving.batcher import MicroBatcher
 from repro.serving.engine_cache import EngineCache, engine_key
+from repro.serving.request import RequestOptions, Ticket
 from repro.serving.resilience import CircuitBreaker, Overloaded, RetryPolicy
+from repro.serving.scheduler import DeviceScheduler
 from repro.serving.streaming import StreamSession
+
+
+@dataclass(frozen=True)
+class ServingOptions:
+    """Server-wide serving knobs (frozen — share one object freely).
+
+    ``max_batch`` / ``window_ms`` configure every batcher's forming
+    batch; ``deadline_ms`` is the default per-request shed deadline (a
+    ``RequestOptions.deadline_ms`` overrides it per call); ``max_queue``
+    bounds admission; ``retry`` / ``breaker_threshold`` /
+    ``breaker_reset_s`` configure the resilience layer; ``faults`` is
+    the chaos-test injection harness. Defaults keep the seed behavior
+    (unbounded queue, no deadline, breaker wide at 5 consecutive
+    failures).
+    """
+
+    max_batch: int = 8
+    window_ms: float = 2.0
+    deadline_ms: float | None = None
+    max_queue: int | None = None
+    retry: RetryPolicy | None = None
+    breaker_threshold: int = 5
+    breaker_reset_s: float = 30.0
+    faults: object = None
+
+
+# the ServingOptions fields that used to be Server(...) kwargs — the
+# deprecation shim accepts exactly these and nothing else
+_LEGACY_KEYS = tuple(f.name for f in dataclasses.fields(ServingOptions))
 
 
 class Server:
     """Micro-batched multi-network serving out of one process.
 
-    ``networks`` are named configs (``get(name)``) or ArchConfig objects;
-    ``tiny=True`` maps names through ``tiny_variant`` (the CPU/CI path).
-    ``capacity`` bounds the engine cache; ``max_batch`` / ``window_ms``
-    configure every batcher. ``max_queue`` (admission bound),
-    ``deadline_ms`` (shed deadline + SLO telemetry), ``retry`` (transient
-    backoff policy), ``breaker_threshold`` / ``breaker_reset_s`` (circuit
-    breaker), and ``faults`` (injection harness) configure the resilience
-    layer; defaults keep the seed behavior (unbounded queue, no deadline,
-    breaker wide at 5 consecutive failures).
+    ``tiny=True`` maps network names through ``tiny_variant`` (the
+    CPU/CI path). ``capacity`` bounds the engine cache; everything else
+    lives on ``options`` (a ``ServingOptions``). The old flat kwargs
+    (``max_batch=``, ``max_queue=``, ...) still work via a deprecation
+    shim and build a bit-identical server.
     """
 
-    def __init__(self, *, cache: EngineCache | None = None, capacity: int = 4,
-                 tune_mode: str = "cost_model", max_batch: int = 8,
-                 window_ms: float = 2.0, deadline_ms: float | None = None,
-                 max_queue: int | None = None,
-                 retry: RetryPolicy | None = None,
-                 breaker_threshold: int = 5, breaker_reset_s: float = 30.0,
-                 faults=None, tiny: bool = False):
-        self.faults = faults
+    def __init__(self, *, options: ServingOptions | None = None,
+                 cache: EngineCache | None = None, capacity: int = 4,
+                 tune_mode: str = "cost_model", tiny: bool = False,
+                 **legacy):
+        if legacy:
+            unknown = sorted(set(legacy) - set(_LEGACY_KEYS))
+            if unknown:
+                raise TypeError(
+                    f"Server() got unexpected keyword argument(s): "
+                    f"{', '.join(unknown)}")
+            if options is not None:
+                raise ValueError(
+                    "pass ServingOptions OR legacy kwargs, not both: "
+                    f"options={options!r} conflicts with "
+                    f"{sorted(legacy)}")
+            warnings.warn(
+                f"Server({', '.join(sorted(legacy))}=...) kwargs are "
+                f"deprecated; pass options=ServingOptions(...) instead "
+                f"(see docs/serving.md, 'Front door')",
+                DeprecationWarning, stacklevel=2)
+            options = dataclasses.replace(ServingOptions(), **legacy)
+        self.options = options if options is not None else ServingOptions()
+        self.faults = self.options.faults
         self.engines = cache if cache is not None else EngineCache(
-            capacity=capacity, tune_mode=tune_mode, faults=faults)
-        self.max_batch = max_batch
-        self.window_ms = window_ms
-        self.deadline_ms = deadline_ms  # per-request SLO + shed deadline
-        self.max_queue = max_queue
-        self.retry = retry if retry is not None else RetryPolicy()
-        self.breaker_threshold = breaker_threshold
-        self.breaker_reset_s = breaker_reset_s
+            capacity=capacity, tune_mode=tune_mode, faults=self.faults)
         self.tiny = tiny
+        # one device, one scheduler: every batcher dispatch funnels
+        # through it under the oldest-deadline-first fairness policy
+        self.scheduler = DeviceScheduler()
         self._batchers: dict[tuple, MicroBatcher] = {}
         self._streams: list[StreamSession] = []
         self._lock = threading.Lock()
         self._closed = False
+
+    # -- legacy read access (old call sites read these off the server) --
+
+    @property
+    def max_batch(self):
+        return self.options.max_batch
+
+    @property
+    def window_ms(self):
+        return self.options.window_ms
+
+    @property
+    def deadline_ms(self):
+        return self.options.deadline_ms
+
+    @property
+    def max_queue(self):
+        return self.options.max_queue
 
     # ------------------------------------------------------------------
 
@@ -99,68 +169,91 @@ class Server:
         # reference, so cache eviction frees the slot without yanking an
         # engine mid-flight.
         engine = self.engines.get(cfg)
+        opts = self.options
         with self._lock:
             b = self._batchers.get(key)
             if b is None:  # we won (or were alone): register our batcher
+                retry = opts.retry if opts.retry is not None \
+                    else RetryPolicy()
                 b = MicroBatcher(
-                    engine, max_batch=self.max_batch,
-                    window_ms=self.window_ms, deadline_ms=self.deadline_ms,
-                    max_queue=self.max_queue, retry=self.retry,
-                    breaker=CircuitBreaker(threshold=self.breaker_threshold,
-                                           reset_s=self.breaker_reset_s),
+                    engine, max_batch=opts.max_batch,
+                    window_ms=opts.window_ms, deadline_ms=opts.deadline_ms,
+                    max_queue=opts.max_queue, retry=retry,
+                    breaker=CircuitBreaker(threshold=opts.breaker_threshold,
+                                           reset_s=opts.breaker_reset_s),
                     # the degraded-mode hook: a tripped breaker rebuilds
                     # this key's cache entry on the xla fallback plan
                     degrade=lambda cfg=cfg: self.engines.degrade(cfg),
-                    faults=self.faults)
+                    faults=self.faults,
+                    scheduler=self.scheduler,
+                    name=self._stats_key(key))
                 self._batchers[key] = b
             return b
 
     # ------------------------------------------------------------------
 
-    def submit(self, network, image, *, dtype=None):
-        """Non-blocking: route one (H, W, C) image to ``network``'s
-        batcher; returns a Future resolving to (classes,) logits.
+    @staticmethod
+    def _request_options(options, dtype):
+        """Fold a deprecated per-call ``dtype=`` into the options object
+        (warning once); conflicting values are a ValueError."""
+        if dtype is not None:
+            warnings.warn(
+                "the per-call dtype= kwarg is deprecated; pass "
+                "options=RequestOptions(dtype=...) instead "
+                "(see docs/serving.md, 'Front door')",
+                DeprecationWarning, stacklevel=3)
+        opts = options if options is not None else RequestOptions()
+        return opts.merged_dtype(dtype)
 
-        ``dtype`` is the precision knob: ``dtype="bfloat16"`` serves the
-        request from the network's bf16 variant (own engine-cache entry,
-        own dtype-keyed tuning plan, images cast in the forward); ``None``
-        serves at the config's native precision.
+    def submit(self, network, image, *, options: RequestOptions | None = None,
+               dtype=None) -> Ticket:
+        """Non-blocking: route one (H, W, C) image to ``network``'s
+        batcher; returns a ``Ticket`` resolving to (classes,) logits.
+
+        ``options.dtype`` is the precision knob (``"bfloat16"`` serves
+        from the network's bf16 variant — own engine-cache entry, own
+        dtype-keyed plan); ``options.deadline_ms`` overrides the server's
+        shed deadline for this request; ``options.priority`` biases the
+        device scheduler. ``dtype=`` is the deprecated spelling of
+        ``options.dtype``.
 
         Raises ``Overloaded`` (a typed rejection) if the server is closed
         or the target batcher's bounded queue is full.
         """
-        return self._submit_request(network, image, dtype=dtype).future
+        return Ticket(self._submit_request(network, image,
+                                           options=options, dtype=dtype))
 
-    def _submit_request(self, network, image, *, dtype=None):
+    def _submit_request(self, network, image, *, options=None, dtype=None):
+        opts = self._request_options(options, dtype)
         # the closed check happens under the lock, so a submit racing
         # close() either lands before the batchers drain (and resolves)
         # or is rejected here with the same typed error as shedding
         with self._lock:
             if self._closed:
                 raise Overloaded("server is closed")
-        cfg = self._resolve_cfg(network, dtype)
-        return self._batcher(cfg).submit_request(image)
+        cfg = self._resolve_cfg(network, opts.dtype)
+        return self._batcher(cfg).submit_request(
+            image, deadline_ms=opts.deadline_ms, priority=opts.priority)
 
     def run(self, network, image, timeout: float | None = 120.0, *,
-            dtype=None):
-        """Blocking convenience: submit + await one request.
+            options: RequestOptions | None = None, dtype=None):
+        """Blocking convenience: ``submit(...).result(timeout)``.
 
-        On timeout the request is **cancelled**: if it is still queued,
-        the batcher sheds it at dequeue (``DeadlineExceeded``) instead of
-        burning a dispatch on a result nobody is waiting for.
+        On timeout the request is **cancelled** (via ``Ticket.result``):
+        if it is still queued, the batcher sheds it at dequeue
+        (``DeadlineExceeded``) instead of burning a dispatch on a result
+        nobody is waiting for.
         """
-        req = self._submit_request(network, image, dtype=dtype)
-        try:
-            return req.future.result(timeout)
-        except FutureTimeoutError:
-            req.cancel()
-            raise
+        return self.submit(network, image, options=options,
+                           dtype=dtype).result(timeout)
 
-    def warm(self, network, *, dtype=None) -> None:
+    def warm(self, network, *, options: RequestOptions | None = None,
+             dtype=None) -> None:
         """Build ``network``'s engine + batcher ahead of traffic (the
-        tune/jit cost moves out of the first request's latency); with
-        ``dtype`` set, warms that precision variant."""
-        self._batcher(self._resolve_cfg(network, dtype))
+        tune/jit cost moves out of the first request's latency); with a
+        dtype set, warms that precision variant."""
+        opts = self._request_options(options, dtype)
+        self._batcher(self._resolve_cfg(network, opts.dtype))
 
     def open_stream(self, network, *, fps: float = 30.0,
                     deadline_ms: float | None = None,
@@ -197,9 +290,10 @@ class Server:
 
     def close(self) -> None:
         """Flush every batcher and stream (pending requests and frames
-        still resolve; stream leases are released). Idempotent: the
-        closed flag flips under the lock, so a racing submit either beats
-        the flip (and drains normally) or gets the typed rejection."""
+        still resolve; stream leases are released), then stop the device
+        scheduler. Idempotent: the closed flag flips under the lock, so a
+        racing submit either beats the flip (and drains normally) or gets
+        the typed rejection."""
         with self._lock:
             if self._closed:
                 return
@@ -210,6 +304,8 @@ class Server:
             s.close()
         for b in batchers:
             b.close()
+        # batchers first: their drains still need the device thread
+        self.scheduler.close()
 
     def __enter__(self):
         return self
@@ -234,12 +330,14 @@ class Server:
 
     def stats(self) -> dict:
         """Cache counters (including degraded-mode rebuilds), per-network
-        batcher aggregates (queue depth, dispatch causes, shed/retry/
-        breaker telemetry), per-stream deadline stats."""
+        batcher aggregates (queue depth, mid-flight joins, dispatch
+        causes, shed/retry/breaker telemetry), device-scheduler queue
+        stats, per-stream deadline stats."""
         with self._lock:
             per_net = {self._stats_key(k): b.stats()
                        for k, b in self._batchers.items()}
             streams = {s.name: s.stats() for s in self._streams}
         cache = self.engines.stats()
         return {"cache": cache, "networks": per_net, "streams": streams,
+                "scheduler": self.scheduler.stats(),
                 "degraded": cache["degraded"]}

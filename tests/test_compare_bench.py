@@ -315,9 +315,16 @@ def test_quant_committed_baseline_vs_itself_is_clean():
 
 
 def _serving_payload(shed_rate=0.8, unresolved=0, p95=0.25, bound=0.34,
-                     throughput=6.8):
+                     throughput=6.8, sweep_rates=(0.0, 0.0, 0.2),
+                     sweep_p95=(0.03, 0.04, 0.15), sweep_bound=0.175,
+                     sweep_unresolved=0):
     offered = 80
     shed = int(shed_rate * offered)
+    rungs = [{"load_factor": lf, "offered": 16,
+              "accepted": 16 - int(r * 16), "shed": int(r * 16),
+              "shed_rate": r, "unresolved": sweep_unresolved,
+              "p50_s": p * 0.8, "p95_s": p, "p99_s": p * 1.1}
+             for lf, r, p in zip((0.25, 0.5, 2.0), sweep_rates, sweep_p95)]
     return {
         "kind": "serving",
         "networks": ["resnet18", "mobilenet_v2"],
@@ -329,6 +336,8 @@ def _serving_payload(shed_rate=0.8, unresolved=0, p95=0.25, bound=0.34,
                          "unresolved": unresolved, "max_queue": 4,
                          "accepted_p50_s": p95 * 0.9, "accepted_p95_s": p95,
                          "p95_bound_s": bound},
+            "sweep": {"network": "resnet18", "max_queue": 4,
+                      "p95_bound_s": sweep_bound, "rungs": rungs},
         },
     }
 
@@ -383,6 +392,70 @@ def test_serving_throughput_is_noted_not_gated():
     assert any("not gated" in n for n in notes)
 
 
+def test_sweep_shed_below_saturation_fails():
+    """A sub-capacity rung that sheds means the server rejects traffic it
+    has room for — the SLO curve's left edge must be clean."""
+    base = _serving_payload()
+    cand = _serving_payload(sweep_rates=(0.1, 0.0, 0.2))
+    problems, _ = compare_bench.compare_serving(base, cand)
+    assert any("below saturation" in p for p in problems)
+
+
+def test_sweep_zero_shed_above_saturation_fails():
+    base = _serving_payload()
+    cand = _serving_payload(sweep_rates=(0.0, 0.0, 0.0))
+    problems, _ = compare_bench.compare_serving(base, cand)
+    assert any("admission bound is not being enforced" in p
+               for p in problems)
+
+
+def test_sweep_p95_over_bound_fails_per_rung():
+    base = _serving_payload()
+    cand = _serving_payload(sweep_p95=(0.03, 0.25, 0.15))  # 0.5x rung blows
+    problems, _ = compare_bench.compare_serving(base, cand)
+    assert any("[0.5x]" in p and "bound" in p for p in problems)
+
+
+def test_sweep_non_monotone_shed_fails():
+    """shed(0.5x) > shed(2x) is a broken admission controller even if the
+    2x rung alone looks plausible — but a clean curve must not trip it."""
+    base = _serving_payload()
+    # saturated rungs only: 2x sheds LESS than an imaginary earlier rung
+    cand = _serving_payload()
+    rungs = cand["scenarios"]["sweep"]["rungs"]
+    rungs[2]["shed_rate"] = 0.3
+    rungs.append({"load_factor": 4.0, "offered": 16, "accepted": 14,
+                  "shed": 2, "shed_rate": 0.125, "unresolved": 0,
+                  "p50_s": 0.1, "p95_s": 0.15, "p99_s": 0.16})
+    problems, _ = compare_bench.compare_serving(base, cand)
+    assert any("non-monotone" in p for p in problems)
+
+
+def test_sweep_unresolved_and_shed_drift_fail():
+    base = _serving_payload()
+    cand = _serving_payload(sweep_unresolved=1)
+    problems, _ = compare_bench.compare_serving(base, cand)
+    assert any("never resolved" in p and "sweep" in p for p in problems)
+    cand = _serving_payload(sweep_rates=(0.0, 0.0, 0.9))  # |Δ| > 0.3 band
+    problems, _ = compare_bench.compare_serving(base, cand)
+    assert any("shed_rate moved" in p and "[2x]" in p for p in problems)
+
+
+def test_sweep_missing_rungs_fails_legacy_baseline_skips():
+    base = _serving_payload()
+    cand = _serving_payload()
+    cand["scenarios"]["sweep"]["rungs"] = []
+    problems, _ = compare_bench.compare_serving(base, cand)
+    assert any("no rungs" in p for p in problems)
+    # a pre-sweep baseline (no sweep scenario) never blocks a candidate
+    legacy = _serving_payload()
+    del legacy["scenarios"]["sweep"]
+    problems, notes = compare_bench.compare_serving(
+        legacy, _serving_payload())
+    assert problems == []
+    assert any("only in candidate" in n for n in notes)
+
+
 def test_serving_kind_detection_beats_scenarios_duck_typing():
     """The serving artifact carries "scenarios" like streaming payloads;
     the explicit "kind" field must win over the structural fallback."""
@@ -426,6 +499,19 @@ def test_serving_committed_baseline_vs_itself_is_clean():
     assert over["unresolved"] == 0
     assert over["accepted_p95_s"] <= over["p95_bound_s"]
     assert d["scenarios"]["steady"]["throughput_rps"] > 0
+    # the sweep's own invariants: clean below saturation, shedding above,
+    # monotone shed, every rung's p95 under the artifact's derived bound
+    sweep = d["scenarios"]["sweep"]
+    rates = []
+    for rung in sweep["rungs"]:
+        assert rung["unresolved"] == 0
+        assert rung["p95_s"] <= sweep["p95_bound_s"]
+        if rung["load_factor"] < 1.0:
+            assert rung["shed_rate"] == 0
+        else:
+            assert rung["shed_rate"] > 0
+        rates.append(rung["shed_rate"])
+    assert rates == sorted(rates)
 
 
 def test_cli_exit_codes(tmp_path):

@@ -22,7 +22,9 @@ cover older artifacts):
     every accepted request must resolve (``unresolved == 0``), and
     accepted-request p95 latency must stay under the scenario's
     ``p95_bound_s`` — bounded queues trade rejections for bounded
-    latency, and this gate holds both halves of that trade;
+    latency, and this gate holds both halves of that trade; the sweep
+    scenario extends this to the whole SLO curve (per-rung p95 bound,
+    zero shed below saturation, monotone shed above it);
   * **quant** (``BENCH_quant.json``, has ``rows``) — the
     accuracy-vs-speed gate: per precision row, top-1 agreement with the
     fp32 reference must not drop below the baseline by more than
@@ -245,12 +247,86 @@ def compare_quant(baseline: dict, candidate: dict, *,
     return problems, notes
 
 
+def _compare_sweep_scenario(name: str, b: dict, c: dict, *,
+                            shed_tolerance: float) -> tuple[list[str],
+                                                            list[str]]:
+    """The SLO-curve gate: per rung of the candidate's offered-QPS
+    ladder (matched to the baseline by ``load_factor``),
+
+      * **below saturation** (load_factor < 1) the server must hold a
+        clean SLO: ``shed_rate == 0`` and p95 under the artifact's own
+        derived ``p95_bound_s`` (machine-portable — the bound travels in
+        the artifact);
+      * **above saturation** shedding must engage (rate > 0, within
+        ``shed_tolerance`` of the baseline rung) while accepted p95
+        stays under the same bound;
+      * the candidate's shed curve must be **monotone non-decreasing**
+        in offered load — admission control that sheds *less* at higher
+        load is broken even if every individual rung looks plausible;
+      * ``unresolved == 0`` at every rung.
+
+    -> (problems, notes)."""
+    problems, notes = [], []
+    b_rungs = {r["load_factor"]: r for r in b.get("rungs", [])}
+    c_rungs = {r["load_factor"]: r for r in c.get("rungs", [])}
+    if not c_rungs:
+        return [f"{name}: candidate sweep has no rungs"], notes
+    for only, lfs in (("baseline", b_rungs.keys() - c_rungs.keys()),
+                      ("candidate", c_rungs.keys() - b_rungs.keys())):
+        if lfs:
+            notes.append(f"{name}: rungs only in {only} (skipped): "
+                         f"{sorted(lfs)}")
+    bound = c.get("p95_bound_s")
+    for lf in sorted(c_rungs):
+        r = c_rungs[lf]
+        tag = f"{name}[{lf:g}x]"
+        if r.get("unresolved", 0):
+            problems.append(
+                f"{tag}: {r['unresolved']} accepted request(s) never "
+                f"resolved — every admitted Ticket must settle")
+        rate = r.get("shed_rate")
+        if lf < 1.0:
+            if rate:
+                problems.append(
+                    f"{tag}: shed_rate {rate:.3f} below saturation — an "
+                    f"unloaded server must not reject")
+        else:
+            if rate is not None and rate <= 0:
+                problems.append(
+                    f"{tag}: shed_rate is 0 at {lf:g}x capacity — the "
+                    f"admission bound is not being enforced")
+            b_rate = b_rungs.get(lf, {}).get("shed_rate")
+            if b_rate is not None and rate is not None:
+                if abs(rate - b_rate) > shed_tolerance:
+                    problems.append(
+                        f"{tag}: shed_rate moved {b_rate:.3f} -> "
+                        f"{rate:.3f} (> ±{shed_tolerance:.2f} allowed)")
+                elif rate != b_rate:
+                    notes.append(f"{tag}: shed_rate changed "
+                                 f"{b_rate:.3f} -> {rate:.3f}")
+        p95 = r.get("p95_s")
+        if p95 is not None and bound is not None and p95 > bound:
+            problems.append(
+                f"{tag}: p95 {p95:.3f}s exceeds the {bound:.3f}s bound — "
+                f"the SLO curve is no longer holding")
+    # monotone shed: higher offered load must never shed a lower rate
+    ordered = [c_rungs[lf].get("shed_rate") for lf in sorted(c_rungs)]
+    ordered = [r for r in ordered if r is not None]
+    if any(lo > hi for lo, hi in zip(ordered, ordered[1:])):
+        problems.append(
+            f"{name}: shed curve is non-monotone in offered load "
+            f"({[round(r, 3) for r in ordered]}) — admission control is "
+            f"load-dependent in the wrong direction")
+    return problems, notes
+
+
 def compare_serving(baseline: dict, candidate: dict, *,
                     shed_tolerance: float = 0.3) -> tuple[list[str],
                                                           list[str]]:
-    """Serving-artifact gate. The overload scenario carries the
-    invariants (throughput numbers are wall-clock trend lines — noted,
-    never gated):
+    """Serving-artifact gate. The overload scenario carries the one-point
+    invariants and the sweep scenario (``rungs``) the whole SLO curve
+    (``_compare_sweep_scenario``); throughput numbers are wall-clock
+    trend lines — noted, never gated:
 
       * **every accepted request resolved** — ``unresolved`` must be 0:
         an admitted Future that never settles is the worst serving bug
@@ -277,6 +353,12 @@ def compare_serving(baseline: dict, candidate: dict, *,
                          f"{sorted(names)}")
     for name in common:
         b, c = base[name], cand[name]
+        if "rungs" in b or "rungs" in c:  # the load-sweep (SLO curve) leg
+            problems_, notes_ = _compare_sweep_scenario(
+                name, b, c, shed_tolerance=shed_tolerance)
+            problems.extend(problems_)
+            notes.extend(notes_)
+            continue
         if "shed_rate" in b or "shed_rate" in c:  # the overload leg
             if c.get("unresolved", 0):
                 problems.append(
